@@ -1,0 +1,120 @@
+"""Shared benchmark utilities: the small trained model + serving scenarios."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig, ServingConfig, reduced, MORPH_LLAMA2_7B
+from repro.data import DataConfig, batch_at
+from repro.launch import steps as st
+from repro.models import lm
+from repro.optim import adamw
+
+BENCH_VOCAB = 256
+
+
+@functools.lru_cache(maxsize=2)
+def trained_small_model(steps: int = 250, n_layers: int = 4,
+                        d_model: int = 128):
+    """Train a small LM on markov data so quantization has a *meaningful*,
+    ordered quality impact (random weights don't). Cached per process."""
+    cfg = reduced(MORPH_LLAMA2_7B).replace(
+        name="bench-small", n_layers=n_layers, d_model=d_model,
+        vocab=BENCH_VOCAB, d_ff=4 * d_model)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = adamw.OptConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, batch_size=8, seed=0)
+    step_fn = jax.jit(st.make_train_step(cfg, ocfg))
+    opt = adamw.init(params)
+    losses = []
+    for s in range(steps):
+        x, y = batch_at(dcfg, 0, s)
+        params, opt, stats = step_fn(params, opt, jnp.array(x), jnp.array(y))
+        losses.append(float(stats["loss"]))
+    return cfg, params, losses, dcfg
+
+
+def eval_loss(cfg, params_or_layers, dcfg, *, layer_list=None, n_batches=4):
+    """Cross-entropy on held-out shards (shard 9xx)."""
+    tot = 0.0
+    for b in range(n_batches):
+        x, y = batch_at(dcfg, 900 + b, 0)
+        x, y = jnp.array(x), jnp.array(y)
+        if layer_list is not None:
+            logits = lm.forward_unrolled(cfg, params_or_layers, layer_list, x)
+        else:
+            logits = lm.forward(cfg, params_or_layers, x, moe_cf=-1.0)
+        tot += float(st.softmax_xent(logits, y))
+    return tot / n_batches
+
+
+def perplexity(loss: float) -> float:
+    return float(np.exp(loss))
+
+
+def output_cosine(cfg, params, layer_list, dcfg, n_batches=2) -> float:
+    """The paper's internal quality proxy: cosine(final hidden fp vs mixed)."""
+    from repro.core.sensitivity import final_hidden, mean_cosine
+    fp_list = lm.params_to_layer_list(cfg, params)
+    vals = []
+    for b in range(n_batches):
+        x, _ = batch_at(dcfg, 900 + b, 0)
+        x = jnp.array(x)
+        h_fp = final_hidden(cfg, params, fp_list, x)
+        h_q = final_hidden(cfg, params, layer_list, x)
+        vals.append(mean_cosine(h_fp, h_q))
+    return float(np.mean(vals))
+
+
+@dataclasses.dataclass
+class Scenario:
+    """Paper-scale serving scenario (sim compute, virtual L4 clock)."""
+    cfg: ModelConfig
+    serving: ServingConfig
+    trace_kind: str = "azure"
+    base_rps: float = 0.45
+    duration_s: float = 72.0
+    seed: int = 5
+
+
+def paper_scenario(trace_kind: str = "azure", *, mode: str = "accuracy",
+                   base_rps: float = 0.45) -> Scenario:
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=48, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8, 16), mode=mode,
+                       kv_resize_step_frac=0.125)
+    return Scenario(MORPH_LLAMA2_7B, sc, trace_kind=trace_kind,
+                    base_rps=base_rps)
+
+
+def run_scenario(scn: Scenario, policy: str, *, mode: str = None,
+                 max_steps: int = 40000):
+    import dataclasses as dc
+    from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
+                              azure_like, burstgpt_like)
+    sc = scn.serving if mode is None else dc.replace(scn.serving, mode=mode)
+    gen = azure_like if scn.trace_kind == "azure" else burstgpt_like
+    trace = gen(duration_s=scn.duration_s, base_rps=scn.base_rps,
+                seed=scn.seed, prompt_mean=512, gen_mean=256,
+                prompt_max=1024, gen_max=448)
+    eng = MorphServeEngine(scn.cfg, None, sc,
+                           EngineConfig(policy=policy, compute="sim",
+                                        hw=NVIDIA_L4, dtype="bfloat16",
+                                        seed=1))
+    rep = eng.run_trace(trace, max_steps=max_steps)
+    return eng, rep
+
+
+def timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n * 1e6     # us

@@ -1,0 +1,78 @@
+"""Paper Fig. 4: latency-accuracy tradeoff across policies.
+
+Latency side: paper-scale serving sim (7B on L4, 72s trace) — P95 TTFT +
+SLO violations per policy. Quality side: the small trained model's measured
+quality at each swap level, weighted by the sim's time-in-level histogram
+(quality(level) is real compute; time-in-level comes from the sim — both
+honest, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (eval_loss, output_cosine, paper_scenario,
+                               perplexity, run_scenario, trained_small_model)
+from repro.models import lm
+from repro.quant import quantize_tree
+
+
+def quality_by_level(levels):
+    cfg, params, _, dcfg = trained_small_model()
+    fp_layers = lm.params_to_layer_list(cfg, params)
+    qbank = [quantize_tree(lp, bits=4) for _, lp in fp_layers]
+    out = {}
+    for lvl in levels:
+        frac = min(lvl / 32.0, 1.0)              # map 32-layer levels to 4
+        k = int(round(frac * cfg.n_layers))
+        ll = [(kind, qbank[i] if i < k else lp)
+              for i, (kind, lp) in enumerate(fp_layers)]
+        out[lvl] = {
+            "ppl": perplexity(eval_loss(cfg, params, dcfg, layer_list=ll)),
+            "cosine": output_cosine(cfg, params, ll, dcfg),
+        }
+    return out
+
+
+def run(trace_kind: str = "azure", base_rps: float = 0.45):
+    scn = paper_scenario(trace_kind, base_rps=base_rps)
+    results = {}
+    for policy, mode in [("static_fp16", None), ("static_int4", None),
+                         ("morph", "accuracy"), ("morph", "performance")]:
+        eng, rep = run_scenario(scn, policy, mode=mode)
+        lv_hist = {}
+        for r in eng.all_requests:
+            for l in r.token_levels:
+                lv_hist[l] = lv_hist.get(l, 0) + 1
+        name = policy if mode is None else f"morph_{mode}"
+        results[name] = {"report": rep, "level_hist": lv_hist}
+    qual = quality_by_level(sorted({l for r in results.values()
+                                    for l in r["level_hist"]} | {0, 32}))
+    rows = []
+    for name, r in results.items():
+        rep = r["report"]
+        tot = sum(r["level_hist"].values()) or 1
+        ppl = sum(qual[l]["ppl"] * c for l, c in r["level_hist"].items()) / tot
+        cos = sum(qual[l]["cosine"] * c
+                  for l, c in r["level_hist"].items()) / tot
+        rows.append((name, rep.ttft_p95, rep.slo_violation_rate, ppl, cos,
+                     rep.degraded_token_frac))
+    return rows, qual
+
+
+def main():
+    rows, qual = run()
+    print("policy,ttft_p95_s,slo_violation_rate,effective_ppl,"
+          "output_cosine,degraded_token_frac")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.3f},{row[2]:.4f},{row[3]:.4f},"
+              f"{row[4]:.4f},{row[5]:.4f}")
+    fp = next(r for r in rows if r[0] == "static_fp16")
+    for name in ("morph_accuracy", "morph_performance"):
+        m = next(r for r in rows if r[0] == name)
+        if m[1] > 0:
+            print(f"# {name}: TTFT p95 {fp[1]/m[1]:.2f}x better than fp16, "
+                  f"SLO viol {fp[2]:.1%} -> {m[2]:.1%}")
+
+
+if __name__ == "__main__":
+    main()

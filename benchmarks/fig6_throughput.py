@@ -1,0 +1,56 @@
+"""Paper Fig. 6: throughput / saturation sweep over request rates.
+
+Constant-rate traces at increasing RPS; the saturation point is where TTFT
+p95 crosses the 2s SLO. MorphServe pushes the saturation point right of
+full-precision serving (paper: 1.6-1.83x)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import paper_scenario
+from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
+                          constant_rate)
+
+
+def run(rates=(0.2, 0.4, 0.6, 0.8, 1.0, 1.3), duration_s: float = 40.0):
+    scn = paper_scenario()
+    rows = []
+    for policy, mode in [("static_fp16", None), ("static_int4", None),
+                         ("morph", "performance")]:
+        sc = scn.serving if mode is None else \
+            dataclasses.replace(scn.serving, mode=mode)
+        name = policy if mode is None else f"morph_{mode}"
+        sat = None
+        for rps in rates:
+            trace = constant_rate(duration_s, rps, prompt_len=512,
+                                  gen_len=256, seed=2)
+            eng = MorphServeEngine(scn.cfg, None, sc,
+                                   EngineConfig(policy=policy, compute="sim",
+                                                hw=NVIDIA_L4,
+                                                dtype="bfloat16", seed=1))
+            rep = eng.run_trace(trace, max_steps=30000)
+            rows.append((name, rps, rep.ttft_p95, rep.throughput_tok_s,
+                         rep.slo_violation_rate))
+            if sat is None and rep.ttft_p95 > scn.serving.ttft_slo_s:
+                sat = rps
+        rows.append((name + "_saturation_rps", sat or rates[-1], 0, 0, 0))
+    return rows
+
+
+def main():
+    rows = run()
+    print("policy,rps,ttft_p95_s,throughput_tok_s,slo_violation_rate")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]:.3f},{r[3]:.1f},{r[4]:.4f}")
+    sats = {r[0]: r[1] for r in rows if r[0].endswith("_saturation_rps")}
+    fp = sats.get("static_fp16_saturation_rps")
+    mo = sats.get("morph_performance_saturation_rps")
+    if fp and mo:
+        print(f"# saturation point: morph {mo/fp:.2f}x the fp16 rate "
+              f"(paper: 1.6-1.83x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: wNa16 GEMM + paged attention.
+
+Wall-time on this CPU container measures the *jnp dequant path* (what XLA
+executes here); the Pallas kernels are interpret-mode-validated and their
+TPU benefit is reported via the roofline byte model (weights traffic 4x/2x
+lower)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.kernels import ref
+from repro.quant import qlinear, quantize_tensor
+
+
+def run():
+    rows = []
+    K, N = 2048, 2048
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
+    for M in (1, 16, 128):
+        x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        dense = jax.jit(lambda x, w: x @ w)
+        us_dense = timeit(lambda: jax.block_until_ready(dense(x, w)))
+        for bits in (8, 4):
+            qt = quantize_tensor(w, bits=bits, group=128)
+            qmm = jax.jit(lambda x, qt=qt: qlinear.matmul(x, qt))
+            us_q = timeit(lambda: jax.block_until_ready(qmm(x)))
+            hbm_ratio = qt.nbytes / (w.size * 2)      # vs bf16 weights
+            rows.append((f"wna16_M{M}_int{bits}", us_q,
+                         f"dense_us={us_dense:.0f};hbm_bytes_ratio="
+                         f"{hbm_ratio:.3f}"))
+    # paged attention (jnp reference path = engine decode path)
+    B, H, KVH, Dh, nb, bs, maxnb = 8, 32, 8, 128, 256, 16, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nb, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nb, bs, KVH, Dh))
+    tables = jax.random.randint(ks[3], (B, maxnb), 0, nb)
+    lens = jax.random.randint(ks[4], (B,), 1, maxnb * bs)
+    pref = jax.jit(ref.paged_attention_ref)
+    us = timeit(lambda: jax.block_until_ready(pref(q, kp, vp, tables, lens)))
+    rows.append((f"paged_attn_B{B}_H{H}_T{maxnb*bs}", us,
+                 "jnp_gather_path"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze, load_cells, HBM_BYTES
+
+
+def dryrun_table(dryrun_dir="experiments/dryrun"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(fn))
+        if rec.get("quant") or rec.get("variant", "baseline") != "baseline":
+            continue
+        coll = rec.get("collectives", {})
+        ag = coll.get("all-gather", 0)
+        ar = coll.get("all-reduce", 0)
+        aa = coll.get("all-to-all", 0) + coll.get("collective-permute", 0)
+        rows.append((rec["arch"], rec["shape"], rec["mesh"], rec["status"],
+                     rec.get("argument_size_in_bytes", 0),
+                     rec.get("temp_size_in_bytes", 0),
+                     rec.get("hlo_dot_flops", 0),
+                     ag, ar, aa, rec.get("compile_s", 0)))
+    return rows
+
+
+def main():
+    print("### §Dry-run — every (arch × shape × mesh) cell\n")
+    print("| arch | shape | mesh | status | args/dev | temp/dev | "
+          "dot FLOPs/dev | AG bytes | AR bytes | A2A+CP | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in dryrun_table():
+        print(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]} | "
+              f"{r[4]/2**30:.2f}GiB | {r[5]/2**30:.2f}GiB | {r[6]:.2e} | "
+              f"{r[7]:.2e} | {r[8]:.2e} | {r[9]:.2e} | {r[10]:.0f} |")
+
+    print("\n### §Roofline — single-pod (16×16 = 256 chips), per device\n")
+    print("| cell | t_compute | t_memory | t_collective | dominant | "
+          "useful ratio | roofline frac | HBM/dev | lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in [analyze(x) for x in load_cells()]:
+        if r.get("status") != "ok":
+            print(f"| {r['cell']} | FAIL | | | | | | | {r.get('error','')} |")
+            continue
+        print(f"| {r['cell']} | {r['t_compute_s']:.4f}s | "
+              f"{r['t_memory_s']:.4f}s | {r['t_collective_s']:.4f}s | "
+              f"{r['dominant']} | {r['useful_compute_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.1%} | "
+              f"{r['hbm_per_dev_bytes']/2**30:.1f}GiB"
+              f"{'' if r['fits_hbm'] else ' (OVER)'} | {r['lever']} |")
+
+
+if __name__ == "__main__":
+    main()

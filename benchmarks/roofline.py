@@ -1,0 +1,134 @@
+"""Roofline analysis from the dry-run artifacts (assignment deliverable g).
+
+Reads experiments/dryrun/<cell>.json (written by repro.launch.dryrun) and
+derives, per (arch × shape) on the single-pod mesh:
+
+  compute term    = HLO_FLOPs / (chips × 197e12)
+  memory term     = HLO_bytes / (chips × 819e9)
+  collective term = collective_bytes / (chips × 50e9)
+
+plus MODEL_FLOPS (6·N_active·D for train, 2·N_active·tokens for serve), the
+useful-compute ratio, the dominant bottleneck, and a one-line lever.
+
+NOTE on normalization: XLA compiles ONE partitioned per-device module, so
+``cost_analysis`` flops/bytes are already per-device; collective bytes parsed
+from the HLO are per-device link traffic.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+HBM_BYTES = 16 * 2**30
+
+_LEVERS = {
+    "compute": "reduce redundant FLOPs (remat policy / scan unroll / "
+               "fuse masked attention)",
+    "memory": "cut HBM traffic (int4 weights, bf16->int8 KV, larger "
+              "attention blocks, avoid cache transposes)",
+    "collective": "reshard to cut all-gathers (2D weight layout, "
+                  "reduce-scatter matmuls, overlap collectives with compute)",
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic useful FLOPs per step per DEVICE (divide by 256 chips)."""
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.engine.cost_model import active_params
+    cfg = get_config(arch)
+    sp = SHAPES_BY_NAME[shape]
+    n = active_params(cfg)
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    mult = 6.0 if sp.kind == "train" else 2.0
+    return mult * n * tokens / 256.0
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun",
+               mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or rec.get("quant"):
+            continue
+        out.append(rec)
+    return out
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return {"cell": f"{rec['arch']}×{rec['shape']}", "status": "fail",
+                "error": rec.get("error", "?")}
+    # while-trip-corrected HLO accounting (launch/hlo_analysis.py);
+    # falls back to raw cost_analysis when absent
+    flops = rec.get("hlo_dot_flops") or rec.get("cost_flops", 0.0)
+    byts = rec.get("hlo_dot_bytes") or rec.get("cost_bytes", 0.0)
+    coll = sum(v for k, v in rec.get("collectives", {}).items()
+               if not k.startswith("count_"))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / flops if flops > 0 else float("nan")
+    total_mem = (rec.get("argument_size_in_bytes", 0)
+                 + rec.get("temp_size_in_bytes", 0)
+                 - rec.get("alias_size_in_bytes", 0))
+    frac_roofline = (mf / PEAK_FLOPS) / max(t_c, t_m, t_x) \
+        if max(t_c, t_m, t_x) > 0 else float("nan")
+    return {
+        "cell": f"{rec['arch']}×{rec['shape']}",
+        "status": "ok",
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": frac_roofline,
+        "hbm_per_dev_bytes": total_mem,
+        "fits_hbm": total_mem <= HBM_BYTES,
+        "lever": _LEVERS[dom],
+    }
+
+
+def table(dryrun_dir: str = "experiments/dryrun", mesh: str = "16x16"):
+    rows = [analyze(r) for r in load_cells(dryrun_dir, mesh)]
+    return [r for r in rows if r]
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("status") != "ok":
+        return f"{r['cell']:45s} FAILED: {r.get('error', '')[:60]}"
+    return (f"{r['cell']:45s} t_c={r['t_compute_s']:9.4f}s "
+            f"t_m={r['t_memory_s']:9.4f}s t_x={r['t_collective_s']:9.4f}s "
+            f"dom={r['dominant']:10s} useful={r['useful_compute_ratio']:5.2f} "
+            f"roofline={r['roofline_fraction']:5.2%} "
+            f"hbm={'OK ' if r['fits_hbm'] else 'OVER'} "
+            f"({r['hbm_per_dev_bytes']/2**30:6.1f}GiB)")
+
+
+def main():
+    rows = table()
+    if not rows:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    print(f"{'cell':45s} roofline terms (per device, 256 chips)")
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["t_collective_s"])
+        print(f"\nworst roofline fraction : {worst['cell']} "
+              f"({worst['roofline_fraction']:.2%})")
+        print(f"most collective-bound  : {collb['cell']} "
+              f"(t_x={collb['t_collective_s']:.4f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end serving driver (the paper's experiment shape): replay a 72 s
+Azure-like trace against a 7B-class model at L4 scale for all four policies
+and print the Fig-4-style comparison.
+
+    PYTHONPATH=src python examples/serve_trace.py [--trace burstgpt]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import MORPH_LLAMA2_7B, ServingConfig
+from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
+                          azure_like, burstgpt_like)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="azure",
+                    choices=["azure", "burstgpt"])
+    ap.add_argument("--rps", type=float, default=0.45)
+    args = ap.parse_args()
+
+    gen = azure_like if args.trace == "azure" else burstgpt_like
+    trace = gen(duration_s=72.0, base_rps=args.rps, seed=5, prompt_mean=512,
+                gen_mean=256, prompt_max=1024, gen_max=448)
+    print(f"{args.trace} trace: {len(trace)} requests over 72s")
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=48, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8, 16))
+    for policy, mode in [("static_fp16", "accuracy"),
+                         ("static_int4", "accuracy"),
+                         ("morph", "accuracy"), ("morph", "performance")]:
+        eng = MorphServeEngine(
+            MORPH_LLAMA2_7B, None, dataclasses.replace(sc, mode=mode),
+            EngineConfig(policy=policy, compute="sim", hw=NVIDIA_L4,
+                         dtype="bfloat16", seed=1))
+        rep = eng.run_trace(trace, max_steps=60000)
+        name = policy if policy.startswith("static") else f"morph-{mode}"
+        blocks = [t.kv_total_blocks for t in eng.monitor.history]
+        print(f"{name:18s} {rep.row()}  kv_blocks {blocks[0]}->"
+              f"{max(blocks)}")
+
+
+if __name__ == "__main__":
+    main()

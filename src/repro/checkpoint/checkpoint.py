@@ -1,0 +1,128 @@
+"""Sharded checkpoint save/restore with async writes and elastic resharding.
+
+Format: one ``.npz`` per host-shard + a JSON manifest (leaf paths, shapes,
+dtypes, step). Design points for 1000+ node operation:
+
+  * **async save** — arrays are snapshotted to host (numpy) synchronously
+    (cheap), the file write happens on a background thread so the train loop
+    isn't blocked (the usual two-phase async checkpoint).
+  * **elastic reshard** — leaves are stored unsharded per-leaf (host shard
+    0..K-1 each hold a slice along leaf axis 0 where divisible, else
+    replicated); ``load`` reassembles regardless of the saving topology, so a
+    job can restart on a different device count.
+  * **integrity** — manifest carries a checksum per shard; partial/corrupt
+    checkpoints are detected and the previous step is used (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    from repro.distributed.sharding import path_str
+    items = [(path_str(path), leaf) for path, leaf in flat[0]]
+    return items, flat[1]
+
+
+def _leaf_key(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+def save(ckpt_dir: str, step: int, tree, *, shards: int = 1,
+         async_write: bool = False) -> threading.Thread | None:
+    """Write ``tree`` under ckpt_dir/step_<step>/ in ``shards`` host files."""
+    items, _ = _flatten(tree)
+    host = [(k, np.asarray(v)) for k, v in items]
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d + ".tmp", exist_ok=True)
+
+    def _write():
+        manifest = {"step": step, "shards": shards,
+                    "leaves": [{"path": k, "shape": list(v.shape),
+                                "dtype": str(v.dtype)} for k, v in host],
+                    "checksums": {}}
+        for s in range(shards):
+            payload = {}
+            for i, (k, v) in enumerate(host):
+                if v.ndim >= 1 and v.shape[0] % shards == 0 and shards > 1:
+                    n = v.shape[0] // shards
+                    payload[_leaf_key(i)] = v[s * n:(s + 1) * n]
+                elif s == 0:
+                    payload[_leaf_key(i)] = v
+            fn = os.path.join(d + ".tmp", f"shard_{s:04d}.npz")
+            np.savez(fn, **payload)
+            with open(fn, "rb") as f:
+                manifest["checksums"][f"shard_{s:04d}.npz"] = \
+                    hashlib.md5(f.read()).hexdigest()
+        with open(os.path.join(d + ".tmp", "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(d + ".tmp", d)                    # atomic publish
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for n in os.listdir(ckpt_dir):
+        if n.startswith("step_") and not n.endswith(".tmp"):
+            if verify(os.path.join(ckpt_dir, n)):
+                steps.append(int(n[5:]))
+    return max(steps) if steps else None
+
+
+def verify(step_dir: str) -> bool:
+    mf = os.path.join(step_dir, "manifest.json")
+    if not os.path.exists(mf):
+        return False
+    with open(mf) as f:
+        manifest = json.load(f)
+    for fn, want in manifest["checksums"].items():
+        p = os.path.join(step_dir, fn)
+        if not os.path.exists(p):
+            return False
+        with open(p, "rb") as f:
+            if hashlib.md5(f.read()).hexdigest() != want:
+                return False
+    return True
+
+
+def load(ckpt_dir: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` (elastic across shard
+    counts). Returns (tree, step) or (None, None)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = manifest["shards"]
+    payloads = [np.load(os.path.join(d, f"shard_{s:04d}.npz"))
+                for s in range(shards)]
+    items, treedef = _flatten(tree_like)
+    leaves = []
+    for i, (k, like) in enumerate(items):
+        key = _leaf_key(i)
+        parts = [p[key] for p in payloads if key in p.files]
+        arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        spec = manifest["leaves"][i]
+        assert spec["path"] == k, f"tree mismatch at {k} vs {spec['path']}"
+        assert list(arr.shape) == spec["shape"], (k, arr.shape, spec["shape"])
+        leaves.append(arr.astype(spec["dtype"]))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see archs.py for dims + provenance)."""
+from repro.configs.archs import QWEN2_1P5B as CONFIG
+from repro.configs.archs import reduced
+
+SMOKE = reduced(CONFIG)

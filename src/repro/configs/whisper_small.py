@@ -1,0 +1,5 @@
+"""Assigned architecture config (see archs.py for dims + provenance)."""
+from repro.configs.archs import WHISPER_SMALL as CONFIG
+from repro.configs.archs import reduced
+
+SMOKE = reduced(CONFIG)

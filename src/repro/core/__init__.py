@@ -1,0 +1,19 @@
+"""MorphServe core: the paper's contribution.
+
+  sensitivity   — LTS/LRS/MDS/LIS profiling + Algorithm 1 greedy ordering
+  swap_plan     — precomputed per-layer precision variants + byte ledger
+  memory_ledger — the weights⇄KV device-memory budget invariant
+  monitor       — Serving Monitor (smoothed telemetry)
+  controller    — Morphing Controller (threshold policy, acc/perf modes)
+  actuator      — Morphing Actuator (async swap with transfer-latency model)
+  kv_resizer    — elastic paged-KV pool sizing
+"""
+from repro.core.sensitivity import (SwapProfile, profile_swap_sequence,
+                                    mean_cosine, front_to_back_order,
+                                    back_to_front_order, random_order)
+from repro.core.swap_plan import SwapPlan, build_swap_plan, tree_bytes
+from repro.core.memory_ledger import MemoryLedger
+from repro.core.monitor import ServingMonitor, Telemetry
+from repro.core.controller import MorphingController, MorphCommand
+from repro.core.actuator import MorphingActuator
+from repro.core.kv_resizer import KVResizer, ResizeDecision

@@ -1,0 +1,75 @@
+"""Morphing Actuator: executes swap commands on a worker (paper §3.1/§3.3).
+
+TPU adaptation of asynchronous CUDA-stream swapping (DESIGN.md §2): a swap is
+issued immediately but becomes *effective* only after the modeled host→device
+transfer completes — decode steps continue on the old level in the interim,
+exactly like the paper's overlapped cudaMemcpyAsync. The actuator also owns
+the per-level mixed-precision layer lists (the jit cache key).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.swap_plan import SwapPlan
+
+# host→device link bandwidth for the transfer-latency model. The paper cites
+# PCIe Gen4 26-28 GB/s; TPU v5e host DMA is in the same class.
+DEFAULT_LINK_GBPS = 26.0
+
+
+@dataclasses.dataclass
+class InflightSwap:
+    target_level: int
+    issued_at: float
+    done_at: float
+    bytes: int
+
+
+class MorphingActuator:
+    def __init__(self, plan: SwapPlan, *, link_gbps: float = DEFAULT_LINK_GBPS):
+        self.plan = plan
+        self.link_bps = link_gbps * 1e9
+        self.level = 0
+        self._inflight: Optional[InflightSwap] = None
+        self._lists: Dict[int, list] = {}     # level -> mixed layer list
+        self.swap_log: List[Tuple[float, int, int, float]] = []
+
+    # ------------------------------------------------------------------
+    def layer_list(self, level: Optional[int] = None):
+        lvl = self.level if level is None else level
+        if lvl not in self._lists:
+            self._lists[lvl] = self.plan.layer_list(lvl)
+        return self._lists[lvl]
+
+    def transfer_seconds(self, old: int, new: int) -> float:
+        return self.plan.swap_transfer_bytes(old, new) / self.link_bps
+
+    # ------------------------------------------------------------------
+    def issue(self, target_level: int, now: float) -> InflightSwap:
+        """Begin an asynchronous swap toward ``target_level``."""
+        target_level = self.plan.clamp_level(target_level)
+        if self._inflight is not None or target_level == self.level:
+            return self._inflight
+        nbytes = self.plan.swap_transfer_bytes(self.level, target_level)
+        dt = nbytes / self.link_bps
+        self._inflight = InflightSwap(target_level, now, now + dt, nbytes)
+        return self._inflight
+
+    def poll(self, now: float) -> bool:
+        """Complete the in-flight swap if its transfer window elapsed.
+        Returns True when a level change took effect this call."""
+        if self._inflight is None or now < self._inflight.done_at:
+            return False
+        old = self.level
+        self.level = self._inflight.target_level
+        self.swap_log.append((now, old, self.level, self._inflight.bytes))
+        self._inflight = None
+        return True
+
+    @property
+    def busy(self) -> bool:
+        return self._inflight is not None
+
+    def weight_bytes(self) -> int:
+        return self.plan.weight_bytes(self.level)

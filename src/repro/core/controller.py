@@ -1,0 +1,76 @@
+"""Morphing Controller: pressure detection → swap-level / KV-resize commands
+(paper §3.1). Threshold policy with hysteresis:
+
+  * pressure HIGH  (kv_usage > high watermark, or queue delay > threshold):
+    escalate one swap-level bucket; grant KVResizer the freed bytes.
+  * pressure LOW   (kv_usage < low watermark and queue empty):
+    restore one bucket (LIFO — the most recently swapped layers come back
+    first, matching the paper's state-preserving restore).
+
+``accuracy`` mode uses the paper thresholds and caps the level at half the
+stack; ``performance`` mode swaps earlier (lower watermark) and deeper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ServingConfig
+from repro.core.swap_plan import SwapPlan
+
+
+@dataclasses.dataclass
+class MorphCommand:
+    target_level: int                 # absolute swap level to move to
+    reason: str
+    grow_kv: bool = False             # hint: expand pool after level applies
+    shrink_kv: bool = False
+
+
+class MorphingController:
+    def __init__(self, serving: ServingConfig, plan: SwapPlan):
+        self.sc = serving
+        self.plan = plan
+        self.level = 0
+        max_lvl = serving.max_level(plan.n_layers)
+        self._levels = [l for l in plan.levels if l <= max_lvl]
+        if not self._levels:
+            self._levels = [0]
+
+    # ------------------------------------------------------------------
+    def _next_up(self, level: int) -> int:
+        ups = [l for l in self._levels if l > level]
+        return min(ups) if ups else level
+
+    def _next_down(self, level: int) -> int:
+        downs = [l for l in self._levels if l < level]
+        return max(downs) if downs else level
+
+    def high_watermark(self) -> float:
+        return (self.sc.perf_kv_pressure_high
+                if self.sc.mode == "performance" else self.sc.kv_pressure_high)
+
+    def decide(self, signals: Dict[str, float]) -> Optional[MorphCommand]:
+        kv = signals.get("kv_usage", 0.0)
+        qd = signals.get("queue_delay", 0.0)
+        high = kv > self.high_watermark() or qd > self.sc.queue_delay_high_s
+        low = (kv < self.sc.kv_pressure_low
+               and signals.get("queue_len", 0.0) < 0.5)
+        if high:
+            nxt = self._next_up(self.level)
+            if nxt != self.level:
+                why = (f"kv_usage={kv:.2f}" if kv > self.high_watermark()
+                       else f"queue_delay={qd * 1e3:.0f}ms")
+                return MorphCommand(target_level=nxt, grow_kv=True,
+                                    reason=f"pressure high ({why})")
+            # already at max level — still grant KV growth if possible
+            return MorphCommand(target_level=self.level, grow_kv=True,
+                                reason="pressure high (at max level)")
+        if low and self.level > 0:
+            nxt = self._next_down(self.level)
+            return MorphCommand(target_level=nxt, shrink_kv=True,
+                                reason=f"pressure low (kv_usage={kv:.2f})")
+        return None
+
+    def commit(self, level: int) -> None:
+        self.level = level

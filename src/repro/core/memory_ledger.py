@@ -1,0 +1,55 @@
+"""Device-memory ledger: the single budget that LayerSwapper and KVResizer
+trade against (paper Fig. 3f — freed weight bytes become KV blocks).
+
+Invariant (tested, incl. property-based):
+    weights(level) + kv_pool + activation_reserve <= hbm_budget
+and KV growth beyond the baseline pool is only backed by swap-freed bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class MemoryLedger:
+    hbm_budget: int                    # device bytes available to the worker
+    activation_reserve: int            # headroom for activations/temps
+    weight_bytes: int                  # current (level-dependent) weights
+    kv_block_bytes: int                # bytes of one paged-KV block (all layers)
+    kv_blocks: int = 0                 # current pool size in blocks
+
+    @property
+    def kv_bytes(self) -> int:
+        return self.kv_blocks * self.kv_block_bytes
+
+    @property
+    def used(self) -> int:
+        return self.weight_bytes + self.kv_bytes + self.activation_reserve
+
+    @property
+    def free(self) -> int:
+        return self.hbm_budget - self.used
+
+    def ok(self) -> bool:
+        return self.free >= 0
+
+    def max_kv_blocks(self, weight_bytes: int = None) -> int:
+        """Largest pool that fits with the given (or current) weight bytes."""
+        wb = self.weight_bytes if weight_bytes is None else weight_bytes
+        avail = self.hbm_budget - wb - self.activation_reserve
+        return max(avail // self.kv_block_bytes, 0)
+
+    def set_weights(self, weight_bytes: int) -> None:
+        self.weight_bytes = weight_bytes
+        assert self.ok(), ("ledger violation: weights grew past budget; "
+                           "shrink KV first")
+
+    def resize_kv(self, blocks: int) -> None:
+        assert blocks >= 0
+        old = self.kv_blocks
+        self.kv_blocks = blocks
+        if not self.ok():
+            self.kv_blocks = old
+            raise ValueError(
+                f"KV resize to {blocks} blocks would exceed budget "
+                f"(free={self.free + (blocks - old) * self.kv_block_bytes})")

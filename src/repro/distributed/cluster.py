@@ -1,0 +1,219 @@
+"""Multi-replica serving cluster (control plane) with fault tolerance.
+
+A pod runs many model-parallel replica groups; this module is the dispatcher
+layer above per-replica MorphServe engines (paper Fig. 2: Request Dispatcher
++ per-worker engines), with the operational features 1000-node serving needs:
+
+  * least-loaded dispatch across live replicas
+  * heartbeat failure detection; a dead replica's in-flight requests are
+    re-dispatched (KV is lost → re-prefill, counted as a preemption)
+  * restart after a configurable downtime (weights reload from the host
+    checkpoint — modeled by a restart delay)
+  * straggler mitigation: replicas whose EWMA step time exceeds
+    ``straggler_factor`` x the fleet median get drained + their queued
+    requests re-dispatched
+  * elastic scale-out/in: replicas can be added/removed mid-run
+
+All replicas share one virtual clock (lock-step rounds of the per-replica
+engines) so results stay deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServingConfig
+from repro.engine.engine import EngineConfig, MorphServeEngine
+from repro.engine.metrics import ServingReport, build_report
+from repro.engine.request import RState
+from repro.engine.traces import TraceRequest
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    time_s: float
+    kind: str                        # kill | restart | add | slow | heal
+    replica: int
+    factor: float = 1.0              # slow factor for 'slow'
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    engine: Optional[MorphServeEngine]
+    alive: bool = True
+    slow_factor: float = 1.0
+    last_heartbeat: float = 0.0
+    restart_at: Optional[float] = None
+    drained: bool = False
+
+
+class ServingCluster:
+    def __init__(self, cfg: ModelConfig, params, serving: ServingConfig,
+                 ecfg: EngineConfig, *, n_replicas: int = 2,
+                 heartbeat_timeout_s: float = 1.0,
+                 restart_delay_s: float = 5.0,
+                 straggler_factor: float = 3.0, seed: int = 0):
+        self.cfg, self.params, self.sc = cfg, params, serving
+        self.ec = ecfg
+        self.hb_timeout = heartbeat_timeout_s
+        self.restart_delay = restart_delay_s
+        self.straggler_factor = straggler_factor
+        self.now = 0.0
+        self.rng = np.random.default_rng(seed)
+        self.replicas: List[ReplicaState] = [
+            ReplicaState(self._make_engine(i)) for i in range(n_replicas)]
+        self.pending: List[TraceRequest] = []
+        self.redispatched = 0
+        self.detected_failures = 0
+        self.drains = 0
+
+    def _make_engine(self, i: int) -> MorphServeEngine:
+        e = MorphServeEngine(self.cfg, self.params, self.sc,
+                             dataclasses.replace(self.ec, seed=self.ec.seed + i))
+        e.now = self.now
+        return e
+
+    # ------------------------------------------------------------------
+    def _live(self) -> List[int]:
+        return [i for i, r in enumerate(self.replicas)
+                if r.alive and not r.drained and r.engine is not None]
+
+    def _least_loaded(self) -> Optional[int]:
+        live = self._live()
+        if not live:
+            return None
+        def load(i):
+            e = self.replicas[i].engine
+            return (len(e.queue) + len(e.running),
+                    e.pool.usage())
+        return min(live, key=load)
+
+    def dispatch(self, tr: TraceRequest) -> None:
+        tgt = self._least_loaded()
+        if tgt is None:
+            self.pending.append(tr)
+            return
+        self.replicas[tgt].engine.submit(tr)
+
+    # ------------------------------------------------------------------
+    # fault handling
+    # ------------------------------------------------------------------
+    def kill(self, i: int) -> None:
+        r = self.replicas[i]
+        if not r.alive:
+            return
+        r.alive = False
+        r.restart_at = self.now + self.restart_delay
+
+    def _detect_and_recover(self) -> None:
+        med = np.median([r.engine.monitor.history[-1].step_time_s
+                         for r in self.replicas
+                         if r.alive and r.engine and r.engine.monitor.history]
+                        or [0.0])
+        for i, r in enumerate(self.replicas):
+            # heartbeat: dead replicas stop beating
+            if not r.alive:
+                if self.now - r.last_heartbeat > self.hb_timeout \
+                        and r.engine is not None:
+                    self.detected_failures += 1
+                    self._redispatch_all(i)
+                    r.engine = None               # state lost
+                if r.restart_at is not None and self.now >= r.restart_at:
+                    r.engine = self._make_engine(i)   # reload from checkpoint
+                    r.alive = True
+                    r.restart_at = None
+                    r.last_heartbeat = self.now
+                continue
+            r.last_heartbeat = self.now
+            # straggler: drain replicas far above fleet median step time
+            if (med > 0 and r.engine.monitor.history and
+                    r.engine.monitor.history[-1].step_time_s
+                    > self.straggler_factor * med and len(self._live()) > 1
+                    and not r.drained):
+                r.drained = True
+                self.drains += 1
+                self._redispatch_queued(i)
+
+    def _redispatch_all(self, i: int) -> None:
+        e = self.replicas[i].engine
+        for r in e.all_requests:
+            if r.state in (RState.QUEUED, RState.RUNNING, RState.PREEMPTED):
+                rem = r.max_new_tokens - len(r.generated)
+                if rem > 0:
+                    self.redispatched += 1
+                    self.dispatch(TraceRequest(r.arrival_s, r.prompt_len, rem))
+                r.state = RState.FINISHED         # closed on dead replica
+
+    def _redispatch_queued(self, i: int) -> None:
+        e = self.replicas[i].engine
+        for r in list(e.queue):
+            e.queue.remove(r)
+            r.state = RState.FINISHED
+            self.redispatched += 1
+            self.dispatch(TraceRequest(r.arrival_s, r.prompt_len,
+                                       r.max_new_tokens))
+
+    # ------------------------------------------------------------------
+    def add_replica(self) -> int:
+        self.replicas.append(ReplicaState(self._make_engine(
+            len(self.replicas))))
+        return len(self.replicas) - 1
+
+    def run(self, trace: List[TraceRequest], faults: List[FaultEvent] = (),
+            *, round_s: float = 0.25, horizon_s: float = 120.0
+            ) -> ServingReport:
+        trace = sorted(trace, key=lambda t: t.arrival_s)
+        faults = sorted(faults, key=lambda f: f.time_s)
+        ti = fi = 0
+        while self.now < horizon_s:
+            # inject faults due now
+            while fi < len(faults) and faults[fi].time_s <= self.now:
+                f = faults[fi]
+                fi += 1
+                if f.kind == "kill":
+                    self.kill(f.replica)
+                elif f.kind == "slow":
+                    self.replicas[f.replica].slow_factor = f.factor
+                elif f.kind == "heal":
+                    self.replicas[f.replica].slow_factor = 1.0
+                    self.replicas[f.replica].drained = False
+                elif f.kind == "add":
+                    self.add_replica()
+            # dispatch arrivals due now
+            while ti < len(trace) and trace[ti].arrival_s <= self.now:
+                self.dispatch(trace[ti])
+                ti += 1
+            for tr in list(self.pending):
+                self.pending.remove(tr)
+                self.dispatch(tr)
+            # advance every live replica to self.now + round_s
+            target = self.now + round_s
+            for r in self.replicas:
+                if not r.alive or r.engine is None or r.drained:
+                    continue
+                e = r.engine
+                while e.now < target:
+                    active = (e.queue or e.running)
+                    if not active:
+                        e.now = target
+                        break
+                    dt = e.step()
+                    if r.slow_factor != 1.0:      # straggler runs slower
+                        e.now += dt * (r.slow_factor - 1.0)
+            self.now = target
+            self._detect_and_recover()
+            done = (ti >= len(trace) and fi >= len(faults)
+                    and not self.pending
+                    and all(not (r.engine.queue or r.engine.running)
+                            for r in self.replicas
+                            if r.alive and r.engine is not None))
+            if done:
+                break
+        reqs = [q for r in self.replicas if r.engine is not None
+                for q in r.engine.all_requests]
+        hist = [t for r in self.replicas if r.engine is not None
+                for t in r.engine.monitor.history]
+        return build_report(reqs, ttft_slo_s=self.sc.ttft_slo_s,
+                            duration_s=max(self.now, 1e-9), history=hist)

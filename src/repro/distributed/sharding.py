@@ -1,0 +1,208 @@
+"""Sharding rules for every arch family on the production mesh.
+
+Path-and-shape-driven PartitionSpec assignment with divisibility checks:
+a dim is sharded on an axis only when evenly divisible, otherwise the rule
+falls back to replication (e.g. kv_heads=5 on a 16-way model axis →
+replicated KV, the standard GQA-TP choice).
+
+Modes:
+  * serve: TP over 'model' (heads / d_ff / experts / **cache sequence dim**),
+    DP over 'data' (+ 'pod'); decode KV caches shard T over 'model' so the
+    32k/500k cells fit HBM (DESIGN.md §5).
+  * train: serve rules + FSDP — remaining large dims additionally sharded
+    over 'data' (ZeRO-3 analogue); optimizer moments inherit param specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+def path_str(path) -> str:
+    """Normalize a tree_flatten_with_path key path to 'a/b/0/c' form."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# rules: substring of the leaf path -> (dim sharded on 'model') for 2-D core
+_COL = ("wq", "wk", "wv", "w_uq", "w_dq", "w_dkv", "w_ukv", "w_up", "w_gate",
+        "in_proj", "adapter", "projector")          # (K, N): shard N
+_ROW = ("wo", "w_down", "out_proj")                  # (K, N): shard K
+_EMBED = ("embed",)                                  # (V, D): shard V
+_HEAD = ("lm_head",)                                 # (D, V): shard V
+_REPL = ("router", "norm", "ln", "bias", "beta", "scale", "A_log", "dt_bias",
+         "gnorm", "conv")
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _axis(axes, name):
+    return axes.get(name)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], axes: Dict[str, int],
+                   *, fsdp: bool = False) -> P:
+    """axes: {"model": size, "data": size} for present mesh axes."""
+    model, msize = "model", axes.get("model", 0)
+    data, dsize = "data", axes.get("data", 0)
+    nd = len(shape)
+    path_l = path.lower()
+    parts: list = [None] * nd
+    core0 = 0
+    # stacked layer/expert leading dims stay unsharded (scan carries them),
+    # EXCEPT expert stacks (E, K, N) where we shard E (expert parallelism).
+    if nd >= 3:
+        if "experts" in path_l or path_l.split("/")[-1] in ("w_gate", "w_up",
+                                                            "w_down"):
+            pass
+        core0 = nd - 2
+    is2d = nd >= 2
+
+    def used_axes():
+        out = set()
+        for p in parts:
+            if isinstance(p, tuple):
+                out.update(p)
+            elif p is not None:
+                out.add(p)
+        return out
+
+    def put(dim, axis, size):
+        if parts[dim] is None and _div(shape[dim], size) \
+                and axis not in used_axes():
+            parts[dim] = axis
+            return True
+        return False
+
+    matched = False
+    if is2d and not any(t in path_l for t in _REPL):
+        if nd >= 3 and ("w_gate" in path_l or "w_up" in path_l
+                        or "w_down" in path_l or "packed" in path_l
+                        or "scales" in path_l or "zeros" in path_l):
+            # stacked experts (E, K, N) or stacked-layer weights (L, K, N)
+            if "moe" in path_l:
+                # expert parallelism over BOTH axes when E divides data*model
+                # (e.g. deepseek 256e / 256 chips), else over model only
+                both = msize * dsize
+                if both and _div(shape[nd - 3], both):
+                    parts[nd - 3] = (data, model)
+                    matched = True
+                elif msize:
+                    matched = put(nd - 3, model, msize)
+            if not matched and msize:
+                # stacked per-layer weight: shard core dims as usual
+                if any(t in path_l for t in _ROW):
+                    matched = put(nd - 2, model, msize)
+                else:
+                    matched = put(nd - 1, model, msize)
+        elif any(t in path_l for t in _EMBED) and msize:
+            matched = put(nd - 2, model, msize)
+        elif any(t in path_l for t in _HEAD) and msize:
+            matched = put(nd - 1, model, msize)
+        elif any(t in path_l for t in _ROW) and msize:
+            matched = put(nd - 2, model, msize)
+        elif any(t in path_l for t in _COL) and msize:
+            matched = put(nd - 1, model, msize)
+    if fsdp and dsize and is2d and not any(t in path_l for t in _REPL):
+        # FSDP: shard the largest remaining dim over 'data'
+        order = sorted(range(core0, nd), key=lambda d: -shape[d])
+        for d in order:
+            if parts[d] is None and put(d, data, dsize):
+                break
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape, axes: Dict[str, int], *,
+                fsdp: bool = False):
+    """Map a (ShapeDtypeStruct) param tree to a PartitionSpec tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat[0]:
+        p = path_str(path)
+        specs.append(spec_for_param(p, leaf.shape, axes, fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def batch_axes(axes: Dict[str, int]) -> Tuple[str, ...]:
+    """Mesh axes used for data parallelism (pod absorbs into data)."""
+    out = tuple(a for a in ("pod", "data") if a in axes)
+    return out if out else (None,)
+
+
+def data_spec(shape: Tuple[int, ...], axes: Dict[str, int]) -> P:
+    """Shard batch dim 0 over (pod, data) when divisible."""
+    ba = batch_axes(axes)
+    if ba == (None,):
+        return P(*([None] * len(shape)))
+    size = int(np.prod([axes[a] for a in ba]))
+    if _div(shape[0], size):
+        return P(ba if len(ba) > 1 else ba[0], *([None] * (len(shape) - 1)))
+    # try data only
+    if "data" in axes and _div(shape[0], axes["data"]):
+        return P("data", *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], axes: Dict[str, int],
+               *, seq_dim_by_rank: Optional[Dict[int, int]] = None) -> P:
+    """Decode-cache sharding: batch over data axes, sequence dim over model.
+
+    Cache leaves (stacked over L): k/v (L, B, T, KVH, Dh); mla latent
+    (L, B, T, W); mamba conv (L, B, W, C) / ssm (L, B, H, P, N).
+    """
+    nd = len(shape)
+    parts = [None] * nd
+    msize = axes.get("model", 0)
+    path_l = path.lower()
+    # find batch dim: first dim after optional leading L-stack
+    bdim = 1 if nd >= 3 else 0
+    ba = batch_axes(axes)
+    if ba != (None,):
+        size = int(np.prod([axes[a] for a in ba]))
+        if _div(shape[bdim], size):
+            parts[bdim] = ba if len(ba) > 1 else ba[0]
+        elif "data" in axes and _div(shape[bdim], axes["data"]):
+            parts[bdim] = "data"
+    if any(k in path_l for k in ("self_k", "self_v", "cross_k", "cross_v",
+                                 "latent", "/k", "/v")) or \
+            path_l.endswith(("k", "v")):
+        tdim = bdim + 1
+        if nd > tdim and _div(shape[tdim], msize):
+            parts[tdim] = "model"
+    elif "ssm" in path_l and nd >= 4:
+        # shard SSM heads over model when divisible
+        hdim = bdim + 1
+        if _div(shape[hdim], msize):
+            parts[hdim] = "model"
+    return P(*parts)
+
+
+def cache_specs(cache_shape, axes: Dict[str, int]):
+    flat = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat[0]:
+        p = path_str(path)
+        if p.endswith("pos"):
+            specs.append(P(*([None] * len(leaf.shape))))
+        else:
+            specs.append(cache_spec(p, leaf.shape, axes))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def mesh_axes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

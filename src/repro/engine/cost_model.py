@@ -1,0 +1,137 @@
+"""Roofline step-time model for the virtual serving clock.
+
+The CPU container cannot time real TPU/GPU steps, so the engine advances a
+virtual clock using max(compute, weight-traffic, kv-traffic) per step for a
+target hardware profile — the same three-term model as §Roofline. This is
+what lets the 72-second paper traces reproduce saturation behaviour
+(Fig. 1b / Fig. 6) at realistic scale while the actual tokens come from real
+(small-model) compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.engine.kv_cache import kv_block_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops: float                     # peak dense bf16/fp16 FLOP/s
+    hbm_bw: float                    # bytes/s
+    hbm_bytes: int
+    host_link_bps: float = 26e9     # PCIe gen4-class (paper §3.3)
+
+
+NVIDIA_L4 = HardwareProfile("l4", 121e12, 300e9, 24 * 2**30)
+NVIDIA_A100_80G = HardwareProfile("a100-80g", 312e12, 2039e9, 80 * 2**30)
+TPU_V5E = HardwareProfile("v5e", 197e12, 819e9, 16 * 2**30)
+PROFILES = {p.name: p for p in (NVIDIA_L4, NVIDIA_A100_80G, TPU_V5E)}
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: shared + top-k experts only)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    total = 2 * V * d                     # embed + head (tied counts once; keep 2 as upper)
+    for i in range(L):
+        if cfg.mla is not None:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * cfg.n_heads *
+                    (m.qk_nope_head_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        elif cfg.n_heads:
+            dh = cfg.resolved_head_dim
+            attn = d * (cfg.n_heads * dh) * 2 + d * (cfg.n_kv_heads * dh) * 2
+        else:
+            attn = 0
+        if cfg.family == "ssm" or cfg.family == "hybrid":
+            s = cfg.ssm
+            di = s.expand * d
+            ssm = d * (2 * di + 2 * s.n_groups * s.d_state
+                       + di // s.head_dim) + di * d
+            attn += ssm
+        if cfg.moe is not None and _is_moe_layer(cfg, i):
+            f = cfg.moe.d_ff_expert
+            mlp = (cfg.moe.top_k + cfg.moe.n_shared_experts) * 3 * d * f
+            mlp += d * cfg.moe.n_routed_experts     # router
+        elif cfg.d_ff:
+            mlp = (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+        else:
+            mlp = 0
+        total += attn + mlp
+    return total
+
+
+def total_params(cfg: ModelConfig) -> int:
+    if cfg.moe is None:
+        return active_params(cfg)
+    base = active_params(cfg)
+    f = cfg.moe.d_ff_expert
+    n_moe = sum(_is_moe_layer(cfg, i) for i in range(cfg.n_layers))
+    extra = n_moe * (cfg.moe.n_routed_experts - cfg.moe.top_k) * 3 * cfg.d_model * f
+    return base + extra
+
+
+def _is_moe_layer(cfg, i) -> bool:
+    mc = cfg.moe
+    return (i >= mc.first_k_dense
+            and (i - mc.first_k_dense) % mc.moe_layer_step
+            == mc.moe_layer_step - 1)
+
+
+def weight_bytes_at_level(cfg: ModelConfig, level: int, n_layers_swapped_bits=4,
+                          dtype_bytes: int = 2) -> float:
+    """Approximate device weight bytes with ``level`` layers at int4."""
+    per_layer = total_params(cfg) / max(cfg.n_layers, 1)
+    frac = n_layers_swapped_bits / (8 * dtype_bytes)
+    full = total_params(cfg) * dtype_bytes
+    return full - level * per_layer * dtype_bytes * (1 - frac)
+
+
+@dataclasses.dataclass
+class CostModel:
+    cfg: ModelConfig
+    hw: HardwareProfile
+    block_size: int = 16
+    dtype_bytes: int = 2
+    fixed_overhead_s: float = 2e-4    # launch/dispatch floor per step
+
+    def __post_init__(self):
+        self._active = active_params(self.cfg)
+        self._total = total_params(self.cfg)
+        self._kvb = kv_block_bytes(self.cfg, self.block_size,
+                                   self.dtype_bytes)
+
+    def kv_bytes_per_token(self) -> float:
+        return self._kvb / self.block_size if self._kvb else 0.0
+
+    def decode_step_time(self, batch: int, total_ctx_tokens: int,
+                         weight_bytes: float, level_frac_flops: float = 1.0
+                         ) -> float:
+        """One decode step for ``batch`` sequences w/ given total KV tokens."""
+        if batch == 0:
+            return self.fixed_overhead_s
+        flops = 2.0 * self._active * batch * level_frac_flops
+        kv_read = total_ctx_tokens * self.kv_bytes_per_token()
+        t_compute = flops / self.hw.flops
+        t_mem = (weight_bytes + kv_read) / self.hw.hbm_bw
+        return max(t_compute, t_mem) + self.fixed_overhead_s
+
+    def prefill_time(self, prompt_tokens: int) -> float:
+        flops = 2.0 * self._active * prompt_tokens
+        # quadratic attention term
+        if self.cfg.n_heads:
+            h, dh = cfg_heads(self.cfg)
+            flops += (4.0 * self.cfg.n_layers * h * dh
+                      * prompt_tokens * prompt_tokens / 2)
+        t_compute = flops / self.hw.flops
+        t_mem = self._total * self.dtype_bytes / self.hw.hbm_bw
+        return max(t_compute, t_mem) + self.fixed_overhead_s
+
+
+def cfg_heads(cfg: ModelConfig):
+    return max(cfg.n_heads, 1), max(cfg.resolved_head_dim, 1)

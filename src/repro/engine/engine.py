@@ -1,0 +1,405 @@
+"""MorphServe serving engine: continuous batching + paged KV + morphing loop.
+
+One engine instance = one worker (the paper's Fig. 2 per-worker column:
+Monitor → Controller → Actuator feedback loop wrapped around the step loop).
+
+Clock: virtual, advanced by the roofline cost model per step (DESIGN.md §6)
+so 72-second paper traces replay at paper scale on this CPU container.
+Compute: ``real`` (jitted small-model forward — tokens are real, used by
+tests/examples) or ``sim`` (token ids fabricated; identical control path,
+used by the paper-scale benchmarks).
+
+Policies: ``morph`` (the paper's system), ``static_fp16`` and ``static_int4``
+(the paper's two baselines, same engine, morphing disabled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServingConfig
+from repro.core import (MemoryLedger, MorphingActuator, MorphingController,
+                        KVResizer, ServingMonitor, Telemetry, build_swap_plan,
+                        front_to_back_order)
+from repro.engine import model_exec
+from repro.engine.cost_model import CostModel, HardwareProfile, NVIDIA_L4
+from repro.engine.kv_cache import PagedKVPool, kv_block_bytes
+from repro.engine.metrics import ServingReport, build_report
+from repro.engine.request import Request, RState
+from repro.engine.traces import TraceRequest
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    policy: str = "morph"            # morph | static_fp16 | static_int4
+    compute: str = "real"            # real | sim
+    hw: HardwareProfile = NVIDIA_L4
+    max_prefills_per_step: int = 2
+    dtype: str = "float32"
+    seed: int = 0
+
+
+class MorphServeEngine:
+    def __init__(self, cfg: ModelConfig, params, serving: ServingConfig,
+                 ecfg: EngineConfig, *, swap_order: Optional[Sequence[int]] = None):
+        self.cfg = cfg
+        self.sc = serving
+        self.ec = ecfg
+        self.now = 0.0
+        self.rng = np.random.default_rng(ecfg.seed)
+        self.kinds = tuple(lm.layer_kinds(cfg))
+
+        # --- morphing substrate -------------------------------------------
+        order = list(swap_order) if swap_order is not None \
+            else front_to_back_order(cfg.n_layers)
+        if ecfg.compute == "sim":
+            from repro.core.swap_plan import build_sim_swap_plan
+            self.plan = build_sim_swap_plan(cfg, order, serving=serving,
+                                            bits=serving.swap_bits)
+        else:
+            self.plan = build_swap_plan(cfg, params, order, serving=serving,
+                                        bits=serving.swap_bits)
+        self.actuator = MorphingActuator(self.plan)
+        self.controller = MorphingController(serving, self.plan)
+        self.monitor = ServingMonitor()
+
+        # --- static policies pin the level --------------------------------
+        if ecfg.policy == "static_int4":
+            self._pinned_level = self.plan.n_layers
+        elif ecfg.policy == "static_fp16":
+            self._pinned_level = 0
+        else:
+            self._pinned_level = None
+        if self._pinned_level is not None:
+            self.actuator.level = self._pinned_level
+            self.controller.commit(self._pinned_level)
+
+        # --- memory ledger + paged pool ------------------------------------
+        bs = serving.kv_block_size
+        blk_bytes = max(kv_block_bytes(
+            cfg, bs, dtype_bytes=jnp.dtype(ecfg.dtype).itemsize), 1)
+        w0 = self.plan.weight_bytes(self.actuator.level)
+        # non-swappable weights (embeddings/head/norms) live in the reserve
+        if ecfg.compute == "sim":
+            embed_bytes = 2 * cfg.vocab * cfg.d_model * 2
+        else:
+            embed_bytes = sum(
+                v.size * v.dtype.itemsize
+                for k, v in params.items() if k != "segments"
+                for v in jax.tree.leaves(v))
+        act_reserve = int(0.05 * serving.hbm_budget_bytes) + embed_bytes
+        self.ledger = MemoryLedger(serving.hbm_budget_bytes, act_reserve,
+                                   w0, blk_bytes)
+        baseline_blocks = max(self.ledger.max_kv_blocks(
+            self.plan.weight_bytes(0)), 1)
+        start_blocks = max(self.ledger.max_kv_blocks(w0), 1) \
+            if ecfg.policy == "static_int4" else baseline_blocks
+        start_blocks = max(min(start_blocks,
+                               self.ledger.max_kv_blocks(w0)), 1)
+        try:
+            self.ledger.resize_kv(start_blocks)
+        except ValueError:
+            start_blocks = 1              # SSM archs / degenerate budgets
+            self.ledger.kv_blocks = start_blocks
+        self.resizer = KVResizer(self.ledger, baseline_blocks=baseline_blocks,
+                                 step_frac=serving.kv_resize_step_frac)
+        self.pool = PagedKVPool(cfg, start_blocks + 1, bs,
+                                dtype=jnp.dtype(ecfg.dtype))  # +1 scratch
+
+        # --- decode slots + SSM state pools ---------------------------------
+        self.slots = serving.max_batch_slots
+        self.max_nb = serving.max_blocks_per_seq or \
+            -(-serving.max_seq_len // bs)
+        self._slot_req: List[Optional[Request]] = [None] * self.slots
+        n_ssm = sum(1 for k in self.kinds if k in ("mamba", "hybrid"))
+        if n_ssm and ecfg.compute == "real":
+            from repro.models.mamba import mamba_init_state, _dims
+            st = mamba_init_state(cfg, 1)
+            self.ssm_conv = jnp.zeros((n_ssm, self.slots) +
+                                      st["conv"].shape[1:], jnp.float32)
+            self.ssm_ssm = jnp.zeros((n_ssm, self.slots) +
+                                     st["ssm"].shape[1:], jnp.float32)
+        else:
+            self.ssm_conv = jnp.zeros((0,), jnp.float32)
+            self.ssm_ssm = jnp.zeros((0,), jnp.float32)
+
+        # --- execution + cost ------------------------------------------------
+        if ecfg.compute == "real":
+            self.exec = model_exec.ModelExec(cfg, params, self.kinds)
+        else:
+            self.exec = None
+        self.cost = CostModel(cfg, ecfg.hw, block_size=bs)
+
+        # --- request state ----------------------------------------------------
+        self.queue: List[Request] = []
+        self.all_requests: List[Request] = []
+        self._next_rid = 0
+        self.rejected = 0
+        self.resize_log: List = []
+
+    # ------------------------------------------------------------------
+    # request admission / lifecycle
+    # ------------------------------------------------------------------
+    def submit(self, tr: TraceRequest) -> Request:
+        prompt = list(self.rng.integers(0, self.cfg.vocab,
+                                        size=tr.prompt_len))
+        r = Request(self._next_rid, tr.arrival_s, prompt, tr.max_new_tokens)
+        self._next_rid += 1
+        self.all_requests.append(r)
+        # reject requests that can never fit (block table or max-grown pool)
+        theoretical_max = self.ledger.max_kv_blocks(
+            self.plan.weight_bytes(self.plan.n_layers))
+        if self.pool.blocks_for(tr.prompt_len + tr.max_new_tokens + 1) \
+                > min(self.max_nb, theoretical_max):
+            r.state = RState.FINISHED          # rejected; counts as violation
+            self.rejected += 1
+            return r
+        self.queue.append(r)
+        return r
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self._slot_req):
+            if r is None:
+                return i
+        return None
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self._slot_req if r is not None]
+
+    # ------------------------------------------------------------------
+    def _try_prefill(self) -> float:
+        """Admit up to max_prefills_per_step queued requests. Returns the
+        modeled time spent on prefills."""
+        spent = 0.0
+        admitted = 0
+        while self.queue and admitted < self.ec.max_prefills_per_step:
+            r = self.queue[0]
+            if r.arrival_s > self.now:
+                break
+            slot = self._free_slot()
+            nb = self.pool.blocks_for(r.prompt_len + 1)
+            if slot is None or nb > self.max_nb:
+                break
+            ids = self.pool.alloc.alloc(nb)
+            if ids is None:
+                break                                   # memory pressure
+            self.queue.pop(0)
+            r.slot, r.block_ids, r.state = slot, ids, RState.RUNNING
+            self._slot_req[slot] = r
+            if self.ec.compute == "real":
+                first = self._prefill_real(r)
+            else:
+                first = int(self.rng.integers(0, self.cfg.vocab))
+            spent += self.cost.prefill_time(r.prompt_len)
+            # prefill emits the first token
+            tok_time = self.now + spent
+            r.first_token_s = tok_time
+            r.token_times.append(tok_time)
+            r.token_levels.append(self.actuator.level)
+            r.generated.append(first)
+            self.monitor.record_ttft(tok_time - r.arrival_s)
+            admitted += 1
+        return spent
+
+    def _prefill_real(self, r: Request) -> int:
+        bs = self.pool.block_size
+        nb_alloc = len(r.block_ids)
+        # SSM/hybrid state is position-exact: end-padding would pollute the
+        # recurrent state, so those families prefill at exact length (the
+        # KV payload is padded to block alignment inside paged_prefill).
+        if self.cfg.family in ("ssm", "hybrid"):
+            Sp = r.prompt_len
+        else:
+            Sp = max(nb_alloc * bs, r.prompt_len)
+        toks = np.zeros((1, Sp), np.int32)
+        toks[0, :r.prompt_len] = r.prompt
+        ids = jnp.array(r.block_ids, jnp.int32) if nb_alloc else \
+            jnp.zeros((0,), jnp.int32)
+        logits, self.pool.k, self.pool.v, self.ssm_conv, self.ssm_ssm = \
+            self.exec.prefill(self.actuator.layer_list(), jnp.array(toks),
+                              self.pool.k, self.pool.v, ids,
+                              self.ssm_conv, self.ssm_ssm, r.slot)
+        return int(jnp.argmax(logits[r.prompt_len - 1]))
+
+    # ------------------------------------------------------------------
+    def _ensure_decode_blocks(self) -> None:
+        """Allocate the next block for sequences crossing a block boundary;
+        preempt (recompute policy) when the pool is exhausted."""
+        for r in sorted(self.running, key=lambda r: r.rid):
+            if r.state != RState.RUNNING:
+                continue          # preempted by an earlier victim selection
+            need = self.pool.blocks_for(r.context_len + 1)
+            while need > len(r.block_ids):
+                got = self.pool.alloc.alloc(1)
+                if got is None:
+                    victim = max(self.running, key=lambda q: q.rid)
+                    self._preempt(victim)
+                    if victim is r:
+                        break
+                    continue
+                r.block_ids.extend(got)
+
+    def _preempt(self, r: Request) -> None:
+        self.pool.alloc.release(r.block_ids)
+        r.block_ids = []
+        self._slot_req[r.slot] = None
+        r.slot = -1
+        r.state = RState.PREEMPTED
+        r.preemptions += 1
+        # recompute policy: generated tokens are folded into the prompt
+        r.prompt = r.prompt + r.generated
+        r.max_new_tokens -= len(r.generated)
+        r.generated = []
+        self.queue.insert(0, r)
+
+    def _decode_once(self) -> float:
+        run = self.running
+        if not run:
+            return 0.0
+        self._ensure_decode_blocks()
+        run = self.running
+        if not run:
+            return 0.0
+        if self.ec.compute == "real":
+            self._decode_real(run)
+        else:
+            for r in run:
+                r.generated.append(int(self.rng.integers(0, self.cfg.vocab)))
+        total_ctx = sum(r.context_len for r in run)
+        lvl = self.actuator.level
+        dt = self.cost.decode_step_time(
+            len(run), total_ctx, self.plan.weight_bytes(lvl))
+        t = self.now + dt
+        for r in run:
+            r.token_times.append(t)
+            r.token_levels.append(lvl)
+            if r.done:
+                self._finish(r, t)
+        return dt
+
+    def _decode_real(self, run: List[Request]) -> None:
+        bs = self.pool.block_size
+        tokens = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        tables = np.zeros((self.slots, self.max_nb), np.int32)
+        for r in run:
+            tokens[r.slot, 0] = r.generated[-1]
+            pos[r.slot] = r.context_len
+            ids = r.block_ids[:self.max_nb]
+            tables[r.slot, :len(ids)] = ids
+        logits, self.pool.k, self.pool.v, self.ssm_conv, self.ssm_ssm = \
+            self.exec.decode(self.actuator.layer_list(), jnp.array(tokens),
+                             jnp.array(pos), self.pool.k, self.pool.v,
+                             jnp.array(tables), self.ssm_conv, self.ssm_ssm)
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        for r in run:
+            r.generated.append(int(toks[r.slot]))
+
+    def _finish(self, r: Request, t: float) -> None:
+        r.state = RState.FINISHED
+        r.finish_s = t
+        self.pool.alloc.release(r.block_ids)
+        r.block_ids = []
+        self._slot_req[r.slot] = None
+        r.slot = -1
+
+    # ------------------------------------------------------------------
+    # morphing control
+    # ------------------------------------------------------------------
+    def _morph_tick(self) -> None:
+        if self._pinned_level is not None:
+            return
+        level_changed = self.actuator.poll(self.now)
+        if level_changed:
+            self.controller.commit(self.actuator.level)
+            self.ledger.set_weights(self.actuator.weight_bytes())
+        sig = self.monitor.signals()
+        cmd = self.controller.decide(sig)
+        if cmd is None:
+            return
+        if cmd.target_level > self.actuator.level and not self.actuator.busy:
+            self.actuator.issue(cmd.target_level, self.now)
+        if cmd.grow_kv:
+            # grow only against *committed* (already-freed) weight bytes
+            dec = self.resizer.grow(weight_bytes=self.ledger.weight_bytes,
+                                    live_blocks=self.pool.alloc.n_used)
+            if dec is not None:
+                self.ledger.resize_kv(dec.new_blocks)
+                self.pool.resize(dec.new_blocks + 1)
+                self.resize_log.append((self.now, dec.new_blocks))
+        if cmd.target_level < self.actuator.level and not self.actuator.busy:
+            # shrink pool first if the restored weights wouldn't fit
+            wb_restored = self.plan.weight_bytes(cmd.target_level)
+            if not self.resizer.fits_restore(
+                    weight_bytes_restored=wb_restored):
+                dec = self.resizer.shrink(
+                    weight_bytes=wb_restored,
+                    live_blocks=self.pool.alloc.n_used)
+                if dec is not None and self.pool.resize(dec.new_blocks + 1):
+                    self.ledger.resize_kv(dec.new_blocks)
+                    self.resize_log.append((self.now, dec.new_blocks))
+            if self.resizer.fits_restore(weight_bytes_restored=wb_restored):
+                self.actuator.issue(cmd.target_level, self.now)
+        elif cmd.shrink_kv and self.actuator.level == 0:
+            dec = self.resizer.shrink(weight_bytes=self.ledger.weight_bytes,
+                                      live_blocks=self.pool.alloc.n_used)
+            if dec is not None and self.pool.resize(dec.new_blocks + 1):
+                self.ledger.resize_kv(dec.new_blocks)
+                self.resize_log.append((self.now, dec.new_blocks))
+
+    # ------------------------------------------------------------------
+    def step(self) -> float:
+        """One engine iteration; returns elapsed virtual time."""
+        dt = self._try_prefill()
+        dt += self._decode_once()
+        if dt == 0.0:
+            dt = 1e-3                                   # idle tick
+        self.now += dt
+        oldest = min((r.arrival_s for r in self.queue
+                      if r.arrival_s <= self.now), default=None)
+        self.monitor.observe(Telemetry(
+            time_s=self.now,
+            kv_used_blocks=self.pool.alloc.n_used,
+            kv_total_blocks=self.pool.num_blocks - 1,
+            queue_len=sum(1 for r in self.queue if r.arrival_s <= self.now),
+            oldest_wait_s=(self.now - oldest) if oldest is not None else 0.0,
+            running=len(self.running),
+            swap_level=self.actuator.level,
+            step_time_s=dt))
+        self._morph_tick()
+        return dt
+
+    def run_trace(self, trace: List[TraceRequest], *,
+                  horizon_s: Optional[float] = None,
+                  max_steps: int = 200000) -> ServingReport:
+        for tr in trace:
+            self.submit(tr)
+        self.queue.sort(key=lambda r: r.arrival_s)
+        end = horizon_s if horizon_s is not None else \
+            (max(tr.arrival_s for tr in trace) + 1e9)
+        steps = 0
+        while steps < max_steps:
+            steps += 1
+            pending = [r for r in self.all_requests
+                       if r.state in (RState.QUEUED, RState.PREEMPTED,
+                                      RState.RUNNING)]
+            if not pending:
+                break
+            if self.now > end:
+                break
+            nxt = min((r.arrival_s for r in self.queue), default=None)
+            if not self.running and nxt is not None and nxt > self.now:
+                self.now = nxt                           # fast-forward idle
+            self.step()
+        dur = max(self.now, 1e-9)
+        for r in self.all_requests:
+            for t in r.tpots():
+                self.monitor.record_tpot(t)
+        return build_report(self.all_requests, ttft_slo_s=self.sc.ttft_slo_s,
+                            duration_s=dur, history=self.monitor.history)

@@ -1,0 +1,165 @@
+"""Paged KV pool + block allocator (PagedAttention substrate, paper §3.4).
+
+Device layout:
+  k_pool, v_pool: (L, num_blocks, block_size, KVH, Dh)
+  (MLA archs store the latent as KVH=1, Dh = r + rope_dim)
+
+Block 0 is a reserved scratch block (inactive decode slots write there), so
+allocatable ids are 1..num_blocks-1. The allocator hands out lowest-index
+blocks first so that shrinking can usually drop a free tail; ``resize`` grows
+by concatenation (ids stable) and shrinks only when the tail is free — the
+engine defers shrink otherwise, matching the "release when pressure subsides"
+semantics rather than forcibly compacting live sequences.
+
+SSM archs use :class:`StatePool` (per-slot recurrent state) — the paper's KV
+elasticity adapted to attention-free models (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def kv_block_bytes(cfg: ModelConfig, block_size: int,
+                   dtype_bytes: int = 2) -> int:
+    """Device bytes of ONE block across all layers (k+v)."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return 0
+    if cfg.mla is not None:
+        width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return L * block_size * width * dtype_bytes          # latent only
+    kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return L * block_size * 2 * kvh * dh * dtype_bytes
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int):
+        # block 0 reserved as scratch
+        self.num_blocks = num_blocks
+        self.free: List[int] = list(range(num_blocks - 1, 0, -1))  # pop -> low id
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_used(self) -> int:
+        return self.num_blocks - 1 - len(self.free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self.free):
+            return None
+        return [self.free.pop() for _ in range(n)]
+
+    def release(self, ids: List[int]) -> None:
+        for b in ids:
+            assert 0 < b < self.num_blocks
+            self.free.append(b)
+        self.free.sort(reverse=True)
+
+    def grow(self, new_num_blocks: int) -> None:
+        assert new_num_blocks >= self.num_blocks
+        fresh = list(range(new_num_blocks - 1, self.num_blocks - 1, -1))
+        self.free = fresh + self.free
+        self.free.sort(reverse=True)
+        self.num_blocks = new_num_blocks
+
+    def shrinkable_to(self) -> int:
+        """Smallest pool size droppable right now (free tail only)."""
+        used = set(range(1, self.num_blocks)) - set(self.free)
+        return (max(used) + 1) if used else 1
+
+    def shrink(self, new_num_blocks: int) -> bool:
+        if new_num_blocks < self.shrinkable_to():
+            return False
+        self.free = [b for b in self.free if b < new_num_blocks]
+        self.num_blocks = new_num_blocks
+        return True
+
+
+class PagedKVPool:
+    """Owns the device pool arrays + allocator."""
+
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.dtype = dtype
+        L = cfg.n_layers
+        if cfg.mla is not None:
+            width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            self.kvh, self.dh = 1, width
+        else:
+            self.kvh, self.dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        shape = (L, num_blocks, block_size, self.kvh, self.dh)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = (jnp.zeros(shape, dtype) if cfg.mla is None
+                  else jnp.zeros((1,), dtype))     # MLA: latent-only pool
+        self.alloc = BlockAllocator(num_blocks)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.alloc.num_blocks
+
+    def usage(self) -> float:
+        cap = self.num_blocks - 1
+        return self.alloc.n_used / cap if cap else 0.0
+
+    def blocks_for(self, n_tokens: int) -> int:
+        if self.cfg.family == "ssm":
+            return 0                      # attention-free: state slots only
+        return -(-n_tokens // self.block_size)
+
+    # ------------------------------------------------------------------
+    def resize(self, new_num_blocks: int) -> bool:
+        """Grow by concatenation / shrink free tail. Returns success."""
+        old = self.num_blocks
+        if new_num_blocks == old:
+            return True
+        if new_num_blocks > old:
+            extra = new_num_blocks - old
+            pad = [(0, 0)] * self.k.ndim
+            pad[1] = (0, extra)
+            self.k = jnp.pad(self.k, pad)
+            if self.cfg.mla is None:
+                self.v = jnp.pad(self.v, pad)
+            self.alloc.grow(new_num_blocks)
+            return True
+        if not self.alloc.shrink(new_num_blocks):
+            return False
+        self.k = self.k[:, :new_num_blocks]
+        if self.cfg.mla is None:
+            self.v = self.v[:, :new_num_blocks]
+        return True
+
+
+class StatePool:
+    """Per-slot recurrent state pool for SSM/hybrid layers."""
+
+    def __init__(self, cfg: ModelConfig, slots: int):
+        from repro.models.mamba import mamba_init_state
+        self.cfg = cfg
+        self.slots = slots
+        kinds = [k for k in _ssm_layer_indices(cfg)]
+        self.layers = kinds
+        st = mamba_init_state(cfg, slots)
+        self.conv = jnp.stack([st["conv"]] * len(kinds)) if kinds else None
+        self.ssm = jnp.stack([st["ssm"]] * len(kinds)) if kinds else None
+
+    def state_bytes_per_slot(self) -> int:
+        if self.conv is None:
+            return 0
+        per = (self.conv[0, 0].size * self.conv.dtype.itemsize
+               + self.ssm[0, 0].size * self.ssm.dtype.itemsize)
+        return per * len(self.layers)
+
+
+def _ssm_layer_indices(cfg: ModelConfig) -> List[int]:
+    from repro.models.lm import layer_kinds
+    return [i for i, k in enumerate(layer_kinds(cfg))
+            if k in ("mamba", "hybrid")]

@@ -1,0 +1,74 @@
+"""SLO / latency / throughput accounting (paper §4 metrics)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.engine.request import Request, RState
+
+
+def pct(xs: Iterable[float], q: float) -> float:
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    return float(np.percentile(xs, q))
+
+
+@dataclasses.dataclass
+class ServingReport:
+    n_requests: int
+    n_finished: int
+    ttft_avg: float
+    ttft_p50: float
+    ttft_p95: float
+    ttft_p99: float
+    tpot_avg: float
+    tpot_p95: float
+    tpot_p99: float
+    slo_violations: int
+    slo_violation_rate: float
+    throughput_tok_s: float
+    preemptions: int
+    degraded_token_frac: float
+    kv_peak_usage: float
+    kv_peak_blocks: int
+    queue_delay_p95: float
+
+    def row(self) -> str:
+        return (f"ttft_p95={self.ttft_p95:.3f}s slo_viol={self.slo_violation_rate:.2%} "
+                f"tpot_avg={self.tpot_avg*1e3:.1f}ms thpt={self.throughput_tok_s:.0f}tok/s "
+                f"preempt={self.preemptions} degraded_tok={self.degraded_token_frac:.2%}")
+
+
+def build_report(requests: List[Request], *, ttft_slo_s: float,
+                 duration_s: float, history=None) -> ServingReport:
+    fin = [r for r in requests if r.state == RState.FINISHED]
+    ttfts = [r.ttft() for r in fin if r.ttft() is not None]
+    tpots = [t for r in fin for t in r.tpots()]
+    n_tok = sum(len(r.generated) for r in requests)
+    viol = sum(1 for t in ttfts if t > ttft_slo_s)
+    # unserved/unfinished requests whose wait already exceeds SLO also violate
+    for r in requests:
+        if r.state != RState.FINISHED and r.first_token_s is None:
+            viol += 1
+    deg = [r.degraded_token_frac() for r in fin] or [0.0]
+    kv_peak = max((t.kv_usage for t in history), default=0.0) if history else 0.0
+    kv_peak_blocks = max((t.kv_used_blocks for t in history), default=0) \
+        if history else 0
+    qd = [t.oldest_wait_s for t in history] if history else [0.0]
+    return ServingReport(
+        n_requests=len(requests), n_finished=len(fin),
+        ttft_avg=float(np.mean(ttfts)) if ttfts else float("nan"),
+        ttft_p50=pct(ttfts, 50), ttft_p95=pct(ttfts, 95),
+        ttft_p99=pct(ttfts, 99),
+        tpot_avg=float(np.mean(tpots)) if tpots else float("nan"),
+        tpot_p95=pct(tpots, 95), tpot_p99=pct(tpots, 99),
+        slo_violations=viol,
+        slo_violation_rate=viol / max(len(requests), 1),
+        throughput_tok_s=n_tok / duration_s,
+        preemptions=sum(r.preemptions for r in requests),
+        degraded_token_frac=float(np.mean(deg)),
+        kv_peak_usage=kv_peak, kv_peak_blocks=kv_peak_blocks,
+        queue_delay_p95=pct(qd, 95))

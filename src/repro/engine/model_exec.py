@@ -1,0 +1,228 @@
+"""Jitted model execution over the paged KV pool + mixed-precision layers.
+
+This is the worker's data plane. Functions are jitted per
+(layer-list pytree structure, pool shape, padded prompt bucket) — the bounded
+recompile set that replaces CUDA kernel-precompilation (DESIGN.md §2):
+swap levels are bucketed, pool sizes are bucketed, prompt lengths are padded
+to buckets.
+
+Supports the dense/GQA family (the paper's eval models), MLA (latent pool),
+and SSM/hybrid (state slots) — MoE FFNs work in all of them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import lm
+from repro.models import mamba as M
+from repro.models import moe as MO
+from repro.quant import qlinear
+
+
+def pad_bucket(n: int, quantum: int = 64) -> int:
+    """Round up to a small set of buckets (powers of two of `quantum`)."""
+    b = quantum
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Paged attention append + read (jnp path; the Pallas kernel is the TPU path)
+# ---------------------------------------------------------------------------
+def _append_kv(pool_k, pool_v, li, k_new, v_new, blk, off):
+    """Write one new token's KV per slot into layer li of the pool.
+    k_new: (slots, KVH, Dh); blk/off: (slots,) int32 (scratch 0 for idle)."""
+    pk = pool_k.at[li, blk, off].set(k_new)
+    pv = pool_v.at[li, blk, off].set(v_new)
+    return pk, pv
+
+
+def _gather_kv(pool, li, tables):
+    """(slots, maxnb) tables → (slots, maxnb*bs, KVH, Dh)."""
+    g = pool[li][tables]                       # (slots, maxnb, bs, KVH, Dh)
+    s, nb, bs = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape(s, nb * bs, *g.shape[3:])
+
+
+def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, *,
+                      window: int = 0):
+    """x: (slots, 1, D); pos: (slots,) absolute position of the new token."""
+    slots = x.shape[0]
+    bs = pool_k.shape[2]
+    q, k, v = L.gqa_project_qkv(p, cfg, x, pos[:, None])
+    blk_idx = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    pool_k, pool_v = _append_kv(pool_k, pool_v, li, k[:, 0], v[:, 0],
+                                blk_idx, pos % bs)
+    gk = _gather_kv(pool_k, li, tables)
+    gv = _gather_kv(pool_v, li, tables)
+    out = L.naive_attention(q, gk, gv, causal=True, q_offset=pos,
+                            window=window, softcap=cfg.logit_softcap)
+    y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y, pool_k, pool_v
+
+
+def _paged_mla_decode(p, cfg, x, pool_k, li, tables, pos):
+    """MLA with the latent pool (KVH=1, Dh=r+rope). Absorbed-weight scoring."""
+    m = cfg.mla
+    slots = x.shape[0]
+    bs = pool_k.shape[2]
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv_new, k_rope_new = L._mla_qkv(p, cfg, x, pos[:, None])
+    latent_new = jnp.concatenate([c_kv_new[:, 0], k_rope_new[:, 0, 0]], -1)
+    blk_idx = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    pool_k = pool_k.at[li, blk_idx, pos % bs, 0].set(latent_new)
+    lat = _gather_kv(pool_k, li, tables)[..., 0, :]      # (slots, T, r+rope)
+    c_kv, k_rope = jnp.split(lat, [m.kv_lora_rank], axis=-1)
+    T = c_kv.shape[1]
+    kv_len = pos + 1
+    w_ukv = (p["w_ukv"].dequantize(jnp.float32)
+             if qlinear.is_quantized(p["w_ukv"])
+             else p["w_ukv"].astype(jnp.float32))
+    w_ukv = w_ukv.reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    wk = w_ukv[..., :m.qk_nope_head_dim]
+    wv = w_ukv[..., m.qk_nope_head_dim:]
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), wk)
+    s = (jnp.einsum("bshr,btr->bhst", q_abs, c_kv.astype(jnp.float32))
+         + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    s = s * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    msk = jnp.arange(T)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(msk, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", pr, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat, wv).astype(x.dtype)
+    y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"])
+    return y, pool_k
+
+
+# ---------------------------------------------------------------------------
+# Decode step over the full stack
+# ---------------------------------------------------------------------------
+def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
+                      pos, pool_k, pool_v, tables, ssm_conv, ssm_ssm):
+    """tokens: (slots, 1); pos: (slots,) context length (= new token index).
+    Returns (logits (slots, V), pool_k, pool_v, ssm_conv, ssm_ssm)."""
+    x = jnp.take(misc["embed"], tokens, axis=0)
+    ssm_li = 0
+    for i, (kind, p) in enumerate(zip(kinds, layer_params)):
+        w = lm.layer_window(cfg, i)
+        if kind == "mamba":
+            h = L.apply_norm(cfg.norm, p["norm"], x)
+            st = {"conv": ssm_conv[ssm_li], "ssm": ssm_ssm[ssm_li]}
+            y, st = M.mamba_decode(p["mixer"], cfg, h, st)
+            ssm_conv = ssm_conv.at[ssm_li].set(st["conv"])
+            ssm_ssm = ssm_ssm.at[ssm_li].set(st["ssm"])
+            ssm_li += 1
+            x = x + y
+            continue
+        if kind == "hybrid":
+            h = L.apply_norm(cfg.norm, p["ln1"], x)
+            a, pool_k, pool_v = _paged_gqa_decode(
+                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, window=w)
+            st = {"conv": ssm_conv[ssm_li], "ssm": ssm_ssm[ssm_li]}
+            s, st = M.mamba_decode(p["ssm"], cfg, h, st)
+            ssm_conv = ssm_conv.at[ssm_li].set(st["conv"])
+            ssm_ssm = ssm_ssm.at[ssm_li].set(st["ssm"])
+            ssm_li += 1
+            mixed = 0.5 * (p["beta_a"] * L.apply_norm("rmsnorm", p["norm_a"], a)
+                           + p["beta_s"] * L.apply_norm("rmsnorm", p["norm_s"], s))
+            x = x + mixed.astype(x.dtype)
+            h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+            x = x + L.mlp_apply(p["mlp"], cfg, h2)
+            continue
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        if cfg.mla is not None:
+            attn_out, pool_k = _paged_mla_decode(p["attn"], cfg, h, pool_k,
+                                                 i, tables, pos)
+        else:
+            attn_out, pool_k, pool_v = _paged_gqa_decode(
+                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, window=w)
+        if cfg.parallel_block:
+            x = x + attn_out + L.mlp_apply(p["mlp"], cfg, h)
+            continue
+        x = x + attn_out
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        if kind in ("moe", "mla_moe"):
+            y, _ = MO.moe_apply(p["moe"], cfg, h2, capacity_factor=-1.0)
+            x = x + y
+        else:
+            x = x + L.mlp_apply(p["mlp"], cfg, h2)
+    logits = lm.unembed(cfg, misc, x)
+    return logits[:, 0], pool_k, pool_v, ssm_conv, ssm_ssm
+
+
+def paged_prefill(cfg: ModelConfig, kinds, misc, layer_params, tokens,
+                  pool_k, pool_v, block_ids, ssm_conv, ssm_ssm, slot):
+    """Prefill ONE request (batch 1, padded length Sp = len(block_ids)*bs).
+
+    tokens: (1, Sp); block_ids: (nb,) — scratch 0 where padded. Returns
+    (full logits (Sp, V), pools, ssm states)."""
+    layer_list = list(zip(kinds, layer_params))
+    logits, payloads = lm.prefill_collect(cfg, misc, layer_list, tokens)
+    bs = pool_k.shape[2]
+    nb = block_ids.shape[0]
+    Sp = tokens.shape[1]
+    pad = nb * bs - Sp
+
+    def _block_pad(x):                     # (Sp, ...) -> (nb, bs, ...)
+        if pad > 0:
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        return x.reshape(nb, bs, *x.shape[1:])
+
+    ssm_li = 0
+    for i, payload in enumerate(payloads):
+        if "k" in payload and nb > 0:
+            k = _block_pad(payload["k"][0])
+            v = _block_pad(payload["v"][0])
+            pool_k = pool_k.at[i, block_ids].set(k.astype(pool_k.dtype))
+            pool_v = pool_v.at[i, block_ids].set(v.astype(pool_v.dtype))
+        elif "latent" in payload and nb > 0:
+            lat = _block_pad(payload["latent"][0])[:, :, None, :]
+            pool_k = pool_k.at[i, block_ids].set(lat.astype(pool_k.dtype))
+        if "ssm_conv" in payload:
+            ssm_conv = ssm_conv.at[ssm_li, slot].set(payload["ssm_conv"][0])
+            ssm_ssm = ssm_ssm.at[ssm_li, slot].set(payload["ssm_ssm"][0])
+            ssm_li += 1
+    return logits[0], pool_k, pool_v, ssm_conv, ssm_ssm
+
+
+class ModelExec:
+    """Owns the jit caches for prefill/decode at each (level, pool, bucket).
+
+    Layer *kinds* never change with swapping, so they're baked statically;
+    only the per-layer param pytrees (dense vs QTensor) vary by level — jit
+    re-specializes per pytree structure, which is exactly the bounded
+    per-level executable cache."""
+
+    def __init__(self, cfg: ModelConfig, params, kinds):
+        self.cfg = cfg
+        self.kinds = tuple(kinds)
+        self.misc = {k: v for k, v in params.items() if k != "segments"}
+        self._decode_jit = jax.jit(
+            functools.partial(paged_decode_step, cfg, self.kinds),
+            donate_argnums=(4, 5, 7, 8))
+        self._prefill_jit = jax.jit(
+            functools.partial(paged_prefill, cfg, self.kinds),
+            donate_argnums=(3, 4, 6, 7))
+
+    def decode(self, layer_list, tokens, pos, pool_k, pool_v, tables,
+               ssm_conv, ssm_ssm):
+        lp = tuple(p for _, p in layer_list)
+        return self._decode_jit(self.misc, lp, tokens, pos,
+                                pool_k, pool_v, tables, ssm_conv, ssm_ssm)
+
+    def prefill(self, layer_list, tokens, pool_k, pool_v, block_ids,
+                ssm_conv, ssm_ssm, slot):
+        lp = tuple(p for _, p in layer_list)
+        return self._prefill_jit(self.misc, lp, tokens,
+                                 pool_k, pool_v, block_ids, ssm_conv,
+                                 ssm_ssm, slot)

@@ -1,0 +1,58 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class RState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"          # blocks freed; must re-prefill
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    prompt: List[int]                 # token ids
+    max_new_tokens: int
+    state: RState = RState.QUEUED
+    slot: int = -1                    # decode slot when RUNNING
+    block_ids: List[int] = dataclasses.field(default_factory=list)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # morphing bookkeeping: swap level under which each token was generated
+    token_levels: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    def tpots(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    def degraded_token_frac(self) -> float:
+        """Fraction of generated tokens produced under any swapped layer —
+        the paper's token-level degradation confinement metric."""
+        if not self.token_levels:
+            return 0.0
+        return sum(1 for l in self.token_levels if l > 0) / len(self.token_levels)

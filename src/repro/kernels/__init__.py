@@ -1,0 +1,5 @@
+# MorphServe's two compute hot-spots (paper §3.3 / §3.4):
+#   wna16_gemm.py      — fused dequant + GEMM for quantized layer variants
+#   paged_attention.py — block-table KV decode attention (KVResizer substrate)
+# Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
+from repro.kernels import ops, ref

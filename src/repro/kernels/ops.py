@@ -1,0 +1,28 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU container executes the kernel
+bodies in Python for correctness); on a real TPU backend the same call sites
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.wna16_gemm import wna16_gemm as _gemm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wna16_matmul(x2, qt):
+    """x2: (M, K) × QTensor (K, N) → (M, N) float32."""
+    assert qt.bits in (4, 8), "Pallas path supports int4/int8 (DESIGN.md §2)"
+    return _gemm(x2, qt.packed, qt.scales, qt.zeros, bits=qt.bits,
+                 group=qt.group, interpret=_interpret())
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens):
+    return _paged(q, k_pool, v_pool, block_tables, context_lens,
+                  interpret=_interpret())

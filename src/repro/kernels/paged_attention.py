@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: paged-attention decode (block-table KV indirection).
+
+The attention hot-spot of the serving engine. KV lives in a paged pool
+(num_blocks, block_size, kv_heads, head_dim); each sequence owns a list of
+physical block ids (its block table). The kernel walks a sequence's blocks
+with **scalar-prefetched** block tables — the index_map reads the table to
+pick which physical pool block to DMA into VMEM next, which is the TPU-native
+equivalent of PagedAttention's pointer indirection (vLLM) and what KVResizer's
+elastic pool relies on.
+
+Grid: (batch, kv_heads, max_blocks_per_seq), innermost = block walk with an
+online-softmax accumulator in VMEM scratch. GQA: the G = H/KVH query heads of
+a kv head are processed together as the (G, Dh) q block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_size: int,
+                       max_nb: int, scale: float):
+    b = pl.program_id(0)
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx_len = lens_ref[b]
+    base = nb * block_size
+    valid = base < ctx_len                      # any position in this block?
+
+    @pl.when(valid)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)     # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+        s = jnp.where(pos < ctx_len, s, -1e30)  # (G, bs)
+        m_prev = m_scr[...]                      # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(nb == max_nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+                    interpret: bool = True):
+    """q: (B, H, Dh); pools: (num_blocks, bs, KVH, Dh);
+    block_tables: (B, max_nb) int32; context_lens: (B,) int32 → (B, H, Dh).
+
+    Unused table entries may hold any valid block id (masked by length).
+    """
+    B, H, Dh = q.shape
+    num_blocks, bs, KVH, _ = k_pool.shape
+    G = H // KVH
+    max_nb = block_tables.shape[1]
+    qg = q.reshape(B, KVH, G, Dh)
+    scale = Dh ** -0.5
+
+    grid = (B, KVH, max_nb)
+    out = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, block_size=bs, max_nb=max_nb,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh),
+                             lambda b, h, nb, tables, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, Dh),
+                             lambda b, h, nb, tables, lens:
+                             (tables[b, nb], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, Dh),
+                             lambda b, h, nb, tables, lens:
+                             (tables[b, nb], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dh),
+                                   lambda b, h, nb, tables, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, Dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pool, v_pool)
+    return out.reshape(B, H, Dh)

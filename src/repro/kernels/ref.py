@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` of each kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import pack as packing
+
+
+def wna16_gemm_ref(x, packed, scales, zeros, *, bits: int, group: int,
+                   K: int):
+    """Dequantize fully, then matmul. x: (M, K) → (M, N) float32."""
+    q = packing.unpack(packed, bits, K)
+    w = packing.dequantize_groupwise(q, scales, zeros, group, jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens):
+    """Gather-then-dense-softmax oracle. Shapes as in the kernel."""
+    B, H, Dh = q.shape
+    num_blocks, bs, KVH, _ = k_pool.shape
+    G = H // KVH
+    max_nb = block_tables.shape[1]
+    T = max_nb * bs
+    # gather per-sequence KV: (B, max_nb, bs, KVH, Dh) → (B, T, KVH, Dh)
+    k = k_pool[block_tables].reshape(B, T, KVH, Dh)
+    v = v_pool[block_tables].reshape(B, T, KVH, Dh)
+    qg = q.reshape(B, KVH, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    s = s * (Dh ** -0.5)
+    mask = jnp.arange(T)[None, :] < context_lens[:, None]    # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Dh).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused dequant + matmul for weight-only INT4/INT8 GEMM.
+
+The compute hot-spot of MorphServe's quantized layer variants (paper §3.3:
+AWQ INT4 inference kernels). TPU adaptation: dequantization happens in VMEM
+right before the MXU matmul, so HBM traffic is the *packed* weight bytes —
+4x (int4) / 2x (int8) less than bf16. Decode is weight-bandwidth-bound, which
+is exactly why swapped layers speed up TPOT (paper Fig. 7).
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the (bm, bn) output block stays
+resident in VMEM across the K sweep and is accumulated in fp32.
+
+Weight layout (matches quant/pack.py):
+  int4: (K/2, N) uint8, low nibble = even k, high nibble = odd k
+  int8: (K, N) uint8
+  scales/zeros: (K/group, N) float32 — bk must be a multiple of ``group``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_block(w_ref, s_ref, z_ref, bits: int, bk: int, group: int):
+    """Unpack + dequantize one (bk, bn) weight block in VMEM."""
+    if bits == 4:
+        packed = w_ref[...]                        # (bk//2, bn) uint8
+        lo = (packed & 0xF).astype(jnp.float32)
+        hi = ((packed >> 4) & 0xF).astype(jnp.float32)
+        q = jnp.stack([lo, hi], axis=1).reshape(bk, packed.shape[-1])
+    else:                                          # int8
+        q = w_ref[...].astype(jnp.float32)         # (bk, bn)
+    s = jnp.repeat(s_ref[...], group, axis=0)      # (bk, bn)
+    z = jnp.repeat(z_ref[...], group, axis=0)
+    return (q - z) * s
+
+
+def _wna16_kernel(x_ref, w_ref, s_ref, z_ref, o_ref, *, bits: int, bk: int,
+                  group: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_block(w_ref, s_ref, z_ref, bits, bk, group)
+    x = x_ref[...].astype(jnp.float32)             # (bm, bk)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "bm", "bn",
+                                             "bk", "interpret"))
+def wna16_gemm(x, packed, scales, zeros, *, bits: int, group: int,
+               bm: int = 128, bn: int = 128, bk: int = 512,
+               interpret: bool = True):
+    """x: (M, K) × packed int{4,8} (K-packed, N) → (M, N) float32.
+
+    M is padded to ``bm``; K, N must divide by (bk, bn) and bk % group == 0.
+    """
+    M, K = x.shape
+    N = scales.shape[-1]
+    bm = min(bm, max(8, M))
+    bk = min(bk, K)
+    bn = min(bn, N)
+    while K % bk:
+        bk //= 2
+    while bk % group:
+        group //= 2
+    assert K % bk == 0 and N % bn == 0 and bk % group == 0, (K, N, bk, group)
+    pad_m = (-M) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    Mp = M + pad_m
+    n_k = K // bk
+    grid = (Mp // bm, N // bn, n_k)
+
+    kdiv = 2 if bits == 4 else 1
+    out = pl.pallas_call(
+        functools.partial(_wna16_kernel, bits=bits, bk=bk, group=group,
+                          n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // kdiv, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scales, zeros)
+    return out[:M]

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  * params/caches/opt-state as ShapeDtypeStructs (zero allocation)
+  * jit(step, in_shardings=..., out_shardings=...) under the production mesh
+  * .lower() → .compile()  — proves the distribution config is coherent
+  * records memory_analysis(), cost_analysis(), and collective bytes parsed
+    from the lowered HLO into experiments/dryrun/<cell>.json (§Roofline input)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --all-shapes
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell
+Flags: --multi-pod (2x16x16 mesh), --quant (all-layers-int4 serve variant),
+       --out DIR (default experiments/dryrun)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ALL_CONFIGS, SHAPES_BY_NAME, applicable_shapes,
+                           get_config)
+from repro.distributed import sharding as shd
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import ShardCtx
+from repro.optim import adamw
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?\(?((?:\w+\[[0-9,]*\][^\)]*?,?\s*)+)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+    re.M)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output bytes of every collective op, by op kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + total
+        out["count_" + op] = out.get("count_" + op, 0) + 1
+    return out
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg, shape, mesh, *, quant: bool = False):
+    """Returns (jitted_fn, arg_structs) for one cell."""
+    axes = shd.mesh_axes(mesh)
+    ctx = ShardCtx(data_axis="data" if "data" in axes else None,
+                   model_axis="model" if "model" in axes else None)
+    pshape = st.params_shape(cfg)
+    if quant:
+        from repro.launch.quant_specs import quantized_params_shape
+        pshape = quantized_params_shape(cfg, pshape)
+    # fsdp=True for every cell: ZeRO-3 for training, ZeRO-inference-style
+    # weight gathering for serving — required to fit the 100B+ archs on 256
+    # chips (weight-gather collectives show up in the §Roofline term).
+    pspec = shd.param_specs(cfg, pshape, axes, fsdp=True)
+    inp = st.input_specs(cfg, shape)
+    inp_spec = {k: shd.data_spec(v.shape, axes) for k, v in inp.items()}
+
+    if shape.kind == "train":
+        ocfg = adamw.OptConfig()
+        fn = st.make_train_step(cfg, ocfg, ctx)
+        oshape = jax.eval_shape(lambda p: adamw.init(p), pshape)
+        # optimizer moments inherit the param sharding (ZeRO-style)
+        ospec = adamw.OptState(P(), pspec, pspec)
+        args = (pshape, oshape, inp["tokens"], inp["labels"]) + \
+            ((inp["frontend"],) if "frontend" in inp else ())
+        in_sh = (_shardings(mesh, pspec), _shardings(mesh, ospec),
+                 _shardings(mesh, inp_spec["tokens"]),
+                 _shardings(mesh, inp_spec["labels"])) + \
+            ((_shardings(mesh, inp_spec["frontend"]),)
+             if "frontend" in inp else ())
+        jf = jax.jit(fn, in_shardings=in_sh)
+        return jf, args
+    if shape.kind == "prefill":
+        fn = st.make_prefill_step(cfg, ctx)
+        args = (pshape, inp["tokens"]) + \
+            ((inp["frontend"],) if "frontend" in inp else ())
+        in_sh = (_shardings(mesh, pspec),
+                 _shardings(mesh, inp_spec["tokens"])) + \
+            ((_shardings(mesh, inp_spec["frontend"]),)
+             if "frontend" in inp else ())
+        jf = jax.jit(fn, in_shardings=in_sh)
+        return jf, args
+    # decode
+    fn = st.make_serve_step(cfg, ctx)
+    cshape = st.cache_shape(cfg, shape)
+    cspec = shd.cache_specs(cshape, axes)
+    args = (pshape, cshape, inp["tokens"])
+    in_sh = (_shardings(mesh, pspec), _shardings(mesh, cspec),
+             _shardings(mesh, inp_spec["tokens"]))
+    jf = jax.jit(fn, in_shardings=in_sh,
+                 donate_argnums=(1,))
+    return jf, args
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: bool = False, variant: str = "baseline",
+             out_dir: str = "experiments/dryrun", verbose: bool = True):
+    from repro.launch import knobs as K
+    K.set_knobs(**K.VARIANTS[variant])
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = f"{arch}_{shape_name}_{mesh_name}" + ("_int4" if quant else "") \
+        + (f"_{variant}" if variant != "baseline" else "")
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "quant": quant, "variant": variant, "status": "ok"}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            jf, args = build_cell(cfg, shape, mesh, quant=quant)
+            lowered = jf.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            # post-partitioning HLO: collectives + while-trip-corrected costs
+            from repro.launch.hlo_analysis import analyze_hlo
+            hlo = compiled.as_text()
+            rec.update(analyze_hlo(hlo))
+            rec["collectives"] = {
+                k[len("coll_"):]: v for k, v in rec.items()
+                if k.startswith("coll_")}
+            del hlo
+            mem = compiled.memory_analysis()
+            if mem is not None:
+                for k in ("generated_code_size_in_bytes",
+                          "argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes"):
+                    if hasattr(mem, k):
+                        rec[k] = int(getattr(mem, k))
+            cost = compiled.cost_analysis()
+            if cost:
+                c = cost[0] if isinstance(cost, (list, tuple)) else cost
+                rec["cost_flops"] = float(c.get("flops", -1))
+                rec["cost_bytes"] = float(c.get("bytes accessed", -1))
+                rec["cost_transcendentals"] = float(
+                    c.get("transcendentals", -1))
+            rec["lower_s"] = round(t_lower, 1)
+            rec["compile_s"] = round(t_compile, 1)
+            # per-device argument bytes = params+cache resident per chip
+            n_dev = int(np.prod(mesh.devices.shape))
+            rec["n_devices"] = n_dev
+            print(f"[{cell}] OK lower={t_lower:.0f}s compile={t_compile:.0f}s"
+                  f" arg_bytes={rec.get('argument_size_in_bytes', 0):,}"
+                  f" temp_bytes={rec.get('temp_size_in_bytes', 0):,}")
+            if verbose and mem is not None:
+                print(f"  memory_analysis: {mem}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[{cell}] FAIL: {rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all-shapes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name, cfg in ALL_CONFIGS.items():
+            for s in applicable_shapes(cfg):
+                cells.append((name, s.name))
+    elif args.all_shapes:
+        cfg = get_config(args.arch)
+        cells = [(args.arch, s.name) for s in applicable_shapes(cfg)]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    fails = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp, quant=args.quant,
+                           variant=args.variant, out_dir=args.out)
+            fails += rec["status"] != "ok"
+    print(f"dry-run done: {len(cells) * len(meshes) - fails} ok, "
+          f"{fails} failed")
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

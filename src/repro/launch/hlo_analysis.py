@@ -1,0 +1,235 @@
+"""While-loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, so a
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~n_layers.
+This module parses the post-partitioning HLO text, recovers per-computation
+execution multipliers from while-loop trip counts, and accumulates:
+
+  * dot FLOPs (2 x prod(out_shape) x contraction size)
+  * dot traffic bytes (lhs + rhs + out, i.e. major-op HBM traffic; fused
+    elementwise traffic is excluded — documented in EXPERIMENTS.md)
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), trip-count weighted
+
+All numbers are per-device (the partitioned module is per-device SPMD).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+_SHAPE = re.compile(r"(f8e4m3fn|f8e5m2|f64|f32|f16|bf16|s64|u64|s32|u32|s16|"
+                    r"u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_CALLSITE = re.compile(r"(?:to_apply|body|condition|branch_computations|"
+                       r"called_computations|calls)=\{?%?([\w\.\-,%\s]+)\}?")
+_WHILE = re.compile(r"=\s*\S+\s+while\(")
+_DOT = re.compile(r"=\s*(\S+)\s+dot\(")
+_COLLECTIVE = re.compile(r"=\s*(\S+)\s+(all-reduce|all-gather|reduce-scatter|"
+                         r"all-to-all|collective-permute)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(tok):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dt_dims) -> int:
+    dt, dims = dt_dims
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def parse_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _callees(line: str) -> List[Tuple[str, str]]:
+    """[(kind, computation_name)] referenced by an op line."""
+    out = []
+    is_while = " while(" in line
+    for m in re.finditer(r"(body|condition|to_apply|calls)=%?([\w\.\-]+)",
+                         line):
+        out.append((("while_" + m.group(1)) if is_while else m.group(1),
+                    m.group(2)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest s32 constant in the loop condition ≈ trip count (scan/fori)."""
+    best = 1
+    for ln in cond_lines:
+        for m in _CONST_S32.finditer(ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _build_edges(comps: Dict[str, List[str]]):
+    """{caller: [(callee, weight)]} — weight = while trip count or 1."""
+    edges: Dict[str, list] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            cs = _callees(ln)
+            if not cs:
+                continue
+            cond = next((c for k, c in cs if k == "while_condition"), None)
+            trips = _trip_count(comps.get(cond, [])) if cond else 1
+            for kind, callee in cs:
+                if callee not in comps:
+                    continue
+                w = max(trips, 1) if kind == "while_body" else 1
+                edges[name].append((callee, w))
+    return edges
+
+
+def computation_multipliers(comps: Dict[str, List[str]],
+                            entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        return mult
+    mult[entry] = 1.0
+    edges = _build_edges(comps)
+    # fixed-point over precomputed edges (call graphs are acyclic)
+    for _ in range(64):
+        changed = False
+        for name in comps:
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for callee, w in edges[name]:
+                add = m * w
+                if mult.get(callee, 0.0) < add:
+                    mult[callee] = add
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+_LHS_DEF = re.compile(r"^%?([\w\.\-]+)\s*=\s*")
+_DOT_ARGS = re.compile(r"\bdot\(([^)]*)\)")
+
+
+def build_shape_map(lines: List[str]) -> Dict[str, tuple]:
+    """%name -> (dtype, dims) from each instruction's result type."""
+    out = {}
+    for ln in lines:
+        m = _LHS_DEF.match(ln)
+        if not m:
+            continue
+        sh = _SHAPE.search(ln[m.end():].split("(", 1)[0])
+        if sh:
+            out[m.group(1)] = (sh.group(1), sh.group(2))
+    return out
+
+
+def _dot_flops_and_bytes(line: str, shapes_by_name: Dict[str, tuple]
+                         ) -> Tuple[float, float]:
+    shapes = _SHAPE.findall(line.split("dot(", 1)[0])
+    if not shapes:
+        return 0.0, 0.0
+    out_shape = shapes[0]
+    out_elems = _shape_elems(out_shape)
+    byts = out_elems * _DTYPE_BYTES[out_shape[0]]
+    # operand shapes: inline, else resolve instruction names
+    args = _DOT_ARGS.search(line)
+    opshapes = []
+    if args:
+        for tok in args.group(1).split(","):
+            tok = tok.strip()
+            sh = _SHAPE.search(tok)
+            if sh:
+                opshapes.append((sh.group(1), sh.group(2)))
+            else:
+                name = tok.lstrip("%").split(" ")[0]
+                if name in shapes_by_name:
+                    opshapes.append(shapes_by_name[name])
+    for s in opshapes[:2]:
+        byts += _shape_elems(s) * _DTYPE_BYTES[s[0]]
+    flops = 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if m and opshapes:
+        lhs_dims = [int(d) for d in opshapes[0][1].split(",") if d]
+        k = 1
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        flops = 2.0 * out_elems * k
+    return flops, byts
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    comps = parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HDR.match(s)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        # fall back: main-like computation
+        entry = next((c for c in comps if "main" in c), None)
+    mult = computation_multipliers(comps, entry) if entry else {}
+    flops = 0.0
+    dot_bytes = 0.0
+    coll: Dict[str, float] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        shape_map = None
+        for ln in lines:
+            if _DOT.search(ln):
+                if shape_map is None:
+                    shape_map = build_shape_map(lines)
+                f, b = _dot_flops_and_bytes(ln, shape_map)
+                flops += m * f
+                dot_bytes += m * b
+            cm = _COLLECTIVE.search(ln)
+            if cm:
+                sz = _shape_bytes(ln.split("=", 1)[1].split("(", 1)[0])
+                key = cm.group(2)
+                coll[key] = coll.get(key, 0.0) + m * sz
+                coll["count_" + key] = coll.get("count_" + key, 0) + m
+    out = {"hlo_dot_flops": flops, "hlo_dot_bytes": dot_bytes,
+           "n_computations": len(comps)}
+    for k, v in coll.items():
+        out["coll_" + k] = v
+    return out

@@ -1,0 +1,45 @@
+"""Quantized-parameter ShapeDtypeStructs for the all-int4 dry-run variant.
+
+Converts every large 2-D/3-D weight struct in a params tree into the packed
+QTensor struct layout (the 'level = L' MorphServe endpoint), without
+allocating anything — used to lower the quantized serve_step and measure the
+memory/roofline deltas of swapped execution at production scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.quant.qlinear import QTensor
+from repro.distributed.sharding import path_str
+
+MIN_SIZE = 1 << 14
+GROUP = 128
+
+
+def _qstruct(shape, dtype):
+    *lead, K, N = shape
+    g = min(GROUP, K)
+    while K % g:
+        g //= 2
+    return QTensor(
+        jax.ShapeDtypeStruct((*lead, K // 2, N), jnp.uint8),
+        jax.ShapeDtypeStruct((*lead, K // g, N), jnp.float32),
+        jax.ShapeDtypeStruct((*lead, K // g, N), jnp.float32),
+        bits=4, group=g, K=K, N=N, out_dtype=dtype)
+
+
+def quantized_params_shape(cfg: ModelConfig, pshape):
+    flat = jax.tree_util.tree_flatten_with_path(pshape)
+    out = []
+    for path, leaf in flat[0]:
+        p = path_str(path).lower()
+        big = getattr(leaf, "ndim", 0) >= 2 and leaf.size >= MIN_SIZE
+        skip = any(t in p for t in ("embed", "norm", "ln", "router", "conv",
+                                    "beta", "a_log", "dt_bias"))
+        if big and not skip and leaf.shape[-2] % 2 == 0:
+            out.append(_qstruct(leaf.shape, leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(flat[1], out)

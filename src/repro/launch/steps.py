@@ -1,0 +1,135 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch × shape)
+cell. Shared by the dry-run, roofline harness, and trainers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, ENCDEC, VLM
+from repro.models import encdec, lm
+from repro.models.layers import ShardCtx
+from repro.models.registry import frontend_shape, get_model, text_seq_len
+from repro.optim import adamw
+
+
+def model_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct — never allocates)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B = shape.global_batch
+    dt = model_dtype(cfg)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        S = text_seq_len(cfg, shape.seq_len)
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        S = text_seq_len(cfg, shape.seq_len)
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:                                            # decode
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    fs = frontend_shape(cfg, B)
+    if fs is not None and shape.kind != "decode":
+        out["frontend"] = jax.ShapeDtypeStruct(fs, dt)
+    return out
+
+
+def params_shape(cfg: ModelConfig):
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_shape(cfg: ModelConfig, shape: ShapeSpec):
+    from repro.launch.knobs import KNOBS
+    api = get_model(cfg)
+    dt = jnp.dtype(KNOBS.kv_cache_dtype) if KNOBS.kv_cache_dtype else None
+    struct = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               dtype=dt))
+    return struct
+
+
+def opt_state_shape(cfg: ModelConfig):
+    ps = params_shape(cfg)
+    return jax.eval_shape(lambda: adamw.init(_zeros_like_struct(ps)))
+
+
+def _zeros_like_struct(struct):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels):
+    """Sharding-friendly cross-entropy: every op is elementwise or a
+    reduction over V, so vocab-sharded logits stay sharded (a gather over the
+    sharded V axis would force a full all-gather of the logits)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1) + m[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                    ctx: ShardCtx = ShardCtx()):
+    api = get_model(cfg)
+
+    def loss_fn(params, tokens, labels, frontend):
+        from repro.launch.knobs import KNOBS
+        kw = {"moe_cf": KNOBS.moe_capacity_factor} \
+            if cfg.family != ENCDEC else {}
+        logits = api.forward(cfg, params, tokens, frontend=frontend,
+                             ctx=ctx, remat=True, **kw)
+        if cfg.family == VLM:
+            # loss only on text positions (image-token positions excluded)
+            logits = logits[:, cfg.n_image_tokens:]
+        # keep the (B, S, V) logits vocab-sharded through the loss — the
+        # unsharded fp32 copy alone would blow HBM at 256k vocab
+        logits = ctx.constrain(logits, (ctx.data_axis, None, ctx.model_axis))
+        return softmax_xent(logits, labels)
+
+    def train_step(params, opt_state, tokens, labels, frontend=None):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels,
+                                                  frontend)
+        params, opt_state, stats = adamw.apply(opt_cfg, params, grads,
+                                               opt_state)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = ShardCtx()):
+    api = get_model(cfg)
+
+    def prefill_step(params, tokens, frontend=None):
+        logits = api.forward(cfg, params, tokens, frontend=frontend, ctx=ctx)
+        # serving prefill returns next-token logits only
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardCtx = ShardCtx()):
+    """One decode step against a full-length cache (the decode_* cells)."""
+    api = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = api.decode_step(cfg, params, cache, tokens, ctx=ctx)
+        return logits, cache
+
+    return serve_step

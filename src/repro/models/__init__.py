@@ -1,0 +1,3 @@
+from repro.models.registry import (ModelAPI, get_model, dummy_inputs,
+                                   frontend_shape, text_seq_len,
+                                   count_params, param_bytes)

@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, n_frames, frontend_dim); a linear adapter
+maps them into the encoder. Encoder = bidirectional pre-LN transformer with
+sinusoidal positions; decoder = causal self-attn + cross-attn + GELU MLP with
+learned positions (Whisper, arXiv:2212.04356).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import NO_SHARD, ShardCtx
+from repro.quant import qlinear
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    ang = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": L.gqa_init(ks[0], cfg, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[1], cfg, dtype=dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "self_attn": L.gqa_init(ks[0], cfg, dtype),
+            "ln_x": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": L.gqa_init(ks[1], cfg, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[2], cfg, dtype=dtype)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    n_enc = cfg.n_encoder_layers
+    ks = jax.random.split(key, n_enc + cfg.n_layers + 5)
+    enc_blocks = [_enc_block_init(ks[i], cfg, dtype) for i in range(n_enc)]
+    dec_blocks = [_dec_block_init(ks[n_enc + i], cfg, dtype)
+                  for i in range(cfg.n_layers)]
+    return {
+        "adapter": {"w": L.dense_init(ks[-1], (cfg.frontend_dim, cfg.d_model),
+                                      dtype=dtype),
+                    "b": jnp.zeros((cfg.d_model,), dtype)},
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+        "enc_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "embed": L.embed_init(ks[-2], (cfg.vocab, cfg.d_model), dtype),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_blocks),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, *, ctx: ShardCtx = NO_SHARD):
+    """frames: (B, n_frames, frontend_dim) → encoder states (B, T, D)."""
+    x = qlinear.matmul(frames, params["adapter"]["w"]) + params["adapter"]["b"]
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def step(x, blk):
+        h = L.apply_norm(cfg.norm, blk["ln1"], x)
+        x = x + L.gqa_apply(blk["attn"], cfg, h, causal=False, ctx=ctx)
+        h2 = L.apply_norm(cfg.norm, blk["ln2"], x)
+        return x + L.mlp_apply(blk["mlp"], cfg, h2), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+    return L.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _dec_cross_kv(cfg, blk, enc_states):
+    B, T, _ = enc_states.shape
+    KVH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = qlinear.matmul(enc_states, blk["cross_attn"]["wk"]).reshape(
+        B, T, KVH, Dh)
+    v = qlinear.matmul(enc_states, blk["cross_attn"]["wv"]).reshape(
+        B, T, KVH, Dh)
+    return k, v
+
+
+def decode_forward(cfg: ModelConfig, params, tokens, enc_states, *,
+                   ctx: ShardCtx = NO_SHARD):
+    """Teacher-forced decoder pass (train / prefill). tokens: (B, S)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = sinusoids(S, cfg.d_model).astype(x.dtype)  # learned in whisper; sin ok
+    x = x + pos[None]
+
+    def step(x, blk):
+        h = L.apply_norm(cfg.norm, blk["ln1"], x)
+        x = x + L.gqa_apply(blk["self_attn"], cfg, h, ctx=ctx)
+        hx = L.apply_norm(cfg.norm, blk["ln_x"], x)
+        cross_kv = _dec_cross_kv(cfg, blk, enc_states)
+        x = x + L.gqa_apply(blk["cross_attn"], cfg, hx, cross_kv=cross_kv,
+                            ctx=ctx)
+        h2 = L.apply_norm(cfg.norm, blk["ln2"], x)
+        return x + L.mlp_apply(blk["mlp"], cfg, h2), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return jnp.matmul(x, params["embed"].T.astype(x.dtype))   # tied head
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frontend=None,
+            ctx: ShardCtx = NO_SHARD, remat: bool = False,
+            collect_aux: bool = False):
+    enc = encode(cfg, params, frontend, ctx=ctx)
+    logits = decode_forward(cfg, params, tokens, enc, ctx=ctx)
+    if collect_aux:
+        return logits, []
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Dh, KVH, L_ = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_layers
+    return {
+        "self_k": jnp.zeros((L_, batch, max_seq, KVH, Dh), dtype),
+        "self_v": jnp.zeros((L_, batch, max_seq, KVH, Dh), dtype),
+        "cross_k": jnp.zeros((L_, batch, cfg.encoder_seq, KVH, Dh), dtype),
+        "cross_v": jnp.zeros((L_, batch, cfg.encoder_seq, KVH, Dh), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def start_cache(cfg: ModelConfig, params, enc_states, cache):
+    """Precompute per-layer cross-attn KV from encoder states."""
+    def one(blk):
+        return _dec_cross_kv(cfg, blk, enc_states)
+    ks, vs = jax.vmap(one)(params["dec_blocks"])
+    return dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                cross_v=vs.astype(cache["cross_v"].dtype))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *,
+                ctx: ShardCtx = NO_SHARD):
+    """Single-token decoder step. tokens: (B, 1)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    # position embedding at current (per-slot) position
+    tbl = sinusoids(cache["self_k"].shape[2], cfg.d_model)
+    x = x + tbl[pos][:, None].astype(x.dtype)
+
+    def step(carry, blk_and_cache):
+        x = carry
+        blk, sk, sv, ck, cv = blk_and_cache
+        h = L.apply_norm(cfg.norm, blk["ln1"], x)
+        attn_cache = {"k": sk, "v": sv, "pos": pos}
+        a, attn_cache = L.gqa_decode(blk["self_attn"], cfg, h, attn_cache)
+        x = x + a
+        hx = L.apply_norm(cfg.norm, blk["ln_x"], x)
+        c, _ = L.gqa_decode(blk["cross_attn"], cfg, hx,
+                            {"pos": pos}, cross_kv=(ck, cv))
+        x = x + c
+        h2 = L.apply_norm(cfg.norm, blk["ln2"], x)
+        x = x + L.mlp_apply(blk["mlp"], cfg, h2)
+        return x, (attn_cache["k"], attn_cache["v"])
+
+    x = x  # (B,1,D)
+    carry, (new_k, new_v) = jax.lax.scan(
+        step, x, (params["dec_blocks"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = carry
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.matmul(x, params["embed"].T.astype(x.dtype))
+    new_cache = dict(cache, self_k=new_k, self_v=new_v, pos=pos + 1)
+    return logits, new_cache

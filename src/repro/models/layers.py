@@ -1,0 +1,560 @@
+"""Shared layer primitives for the model zoo.
+
+Everything dispatches matmuls through :func:`repro.quant.qlinear.matmul` so a
+layer executes identically whether its weights are dense bf16 or MorphServe-
+swapped QTensors.
+
+Sharding: model code is mesh-agnostic; an optional :class:`ShardCtx` threads
+`with_sharding_constraint` hints through memory-critical intermediates (MoE
+dispatch buffers, attention activations) when lowering on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.quant import qlinear
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    data_axis: Optional[str] = None
+    model_axis: Optional[str] = None
+
+    def constrain(self, x, spec):
+        if self.data_axis is None and self.model_axis is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    def ax(self, name):
+        return {"data": self.data_axis, "model": self.model_axis}[name]
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_init(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if kind == "nonparam_ln":           # OLMo: LN without affine params
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0, fraction: float = 1.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+def _softcap(scores, cap):
+    if cap:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                    kv_len=None, softcap: float = 0.0):
+    """Materialized-score attention.
+
+    q: (B, S, H, D); k, v: (B, T, KVH, D).  GQA via head grouping.
+    ``q_offset``: absolute position of q[0] (decode). ``kv_len``: (B,) valid
+    kv length for cache-backed decode. ``window``: sliding window (0 = full).
+    """
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (D ** -0.5)
+    scores = _softcap(scores, softcap)
+    q_offset = jnp.asarray(q_offset)
+    if q_offset.ndim == 0:
+        q_offset = q_offset[None]                        # (1,) or (B,)
+    qpos = q_offset[:, None] + jnp.arange(S)[None, :]    # (B|1, S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((qpos.shape[0], S, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, None, :] <= qpos[:, :, None]
+    window = jnp.asarray(window)                          # may be traced (hymba)
+    mask &= ((kpos[None, None, :] > qpos[:, :, None] - window)
+             | (window <= 0))
+    if kv_len is not None:
+        mask &= kpos[None, None, :] < kv_len[:, None, None]
+    mask = mask[:, None, None]                           # (B|1,1,1,S,T)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # accumulate in f32 (v may be an fp8 KV cache)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs,
+                     v.astype(jnp.float32)).astype(q.dtype)
+    return out.reshape(B, S, H, v.shape[-1])             # Dv may differ (MLA)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        q_chunk: int = None, kv_chunk: int = None,
+                        softcap: float = 0.0, ctx: ShardCtx = NO_SHARD):
+    """Flash-style blockwise attention (pure JAX, lax.scan over KV chunks).
+
+    Never materializes (S, T); peak activation is (B, H, q_chunk, kv_chunk).
+    This is the prefill path for the 32k/500k cells — the TPU-native
+    equivalent of FlashAttention that the paper reuses on GPU.
+    """
+    from repro.launch.knobs import KNOBS
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KVH
+    q_chunk = min(q_chunk or KNOBS.q_chunk, S)
+    kv_chunk = min(kv_chunk or KNOBS.kv_chunk, T)
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    qg = q.reshape(B, nq, q_chunk, KVH, G, D)
+    kc = k.reshape(B, nk, kv_chunk, KVH, D)
+    vc = v.reshape(B, nk, kv_chunk, KVH, Dv)
+    scale = D ** -0.5
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # (B,qc,KVH,G,D), ()
+        qpos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            s = _softcap(s, softcap)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            wnd = jnp.asarray(window)
+            msk &= (kpos[None, :] > qpos[:, None] - wnd) | (wnd <= 0)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)          # (B,qc,KVH,G,D)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, Dv)
+    return out.astype(q.dtype)
+
+
+def windowed_attention(q, k, v, *, window: int, q_chunk: int = 1024,
+                       softcap: float = 0.0):
+    """Sliding-window prefill that only touches in-window KV.
+
+    FLOPs ∝ S·(window + q_chunk) instead of S², by left-padding KV with
+    ``window`` zeros and dynamic-slicing a (window + q_chunk) strip per query
+    chunk (§Perf lever for the hymba cells). ``window`` must be static.
+    """
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    assert S == T, "windowed path is for self-attention prefill"
+    q_chunk = min(q_chunk, S)
+    while S % q_chunk:
+        q_chunk //= 2
+    nq = S // q_chunk
+    strip = window + q_chunk
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qg = q.reshape(B, nq, q_chunk, H, D)
+
+    G = H // KVH
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # (B,qc,H,D)
+        qs = qidx * q_chunk
+        kblk = jax.lax.dynamic_slice(kp, (0, qs, 0, 0),
+                                     (B, strip, KVH, D))
+        vblk = jax.lax.dynamic_slice(vp, (0, qs, 0, 0),
+                                     (B, strip, KVH, v.shape[-1]))
+        qgk = qblk.reshape(B, q_chunk, KVH, G, D)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qgk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * (D ** -0.5)
+        s = _softcap(s, softcap)
+        # query i sits at strip-pos window+i; key strip-pos j maps to
+        # original pos qs - window + j (pad where that is < 0)
+        i = jnp.arange(q_chunk)[:, None]
+        j = jnp.arange(strip)[None, :]
+        msk = (j <= window + i) & (j > i)                  # causal + window
+        msk &= j >= jnp.maximum(window - qs, 0)            # exclude pad
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), vblk)
+        return None, out.reshape(B, q_chunk, H, v.shape[-1])
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, v.shape[-1]) \
+        .astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                   kv_len=None, softcap: float = 0.0,
+                   ctx: ShardCtx = NO_SHARD):
+    """Choose the materialized vs blockwise vs windowed path."""
+    from repro.launch.knobs import KNOBS
+    S, T = q.shape[1], k.shape[1]
+    if (KNOBS.windowed_attn and isinstance(window, int) and window > 0
+            and kv_len is None and S == T and S >= 2 * window
+            and S * T >= 2048 * 4096):
+        return windowed_attention(q, k, v, window=window, softcap=softcap)
+    if kv_len is None and S * T >= 2048 * 4096 and S % 1024 == 0 and T % 1024 == 0:
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, ctx=ctx)
+    return naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           window=window, kv_len=kv_len, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg, dtype):
+    D, H, KVH = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    Dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * Dh), dtype=dtype),
+        "wk": dense_init(ks[1], (D, KVH * Dh), dtype=dtype),
+        "wv": dense_init(ks[2], (D, KVH * Dh), dtype=dtype),
+        "wo": dense_init(ks[3], (H * Dh, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((KVH * Dh,), dtype)
+        p["bv"] = jnp.zeros((KVH * Dh,), dtype)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((D,), dtype)
+    return p
+
+
+def gqa_project_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = qlinear.matmul(x, p["wq"])
+    k = qlinear.matmul(x, p["wk"])
+    v = qlinear.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KVH, Dh)
+    v = v.reshape(B, S, KVH, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def gqa_apply(p, cfg, x, *, window: int = 0, ctx: ShardCtx = NO_SHARD,
+              cross_kv=None, causal: bool = True):
+    """Full-sequence GQA attention (train / prefill).
+
+    ``cross_kv``: (k, v) from an encoder for cross-attention (no rope, no
+    causal mask).
+    """
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    if cross_kv is None:
+        q, k, v = gqa_project_qkv(p, cfg, x, positions)
+        out = attention_core(q, k, v, causal=causal, window=window,
+                             softcap=cfg.logit_softcap, ctx=ctx)
+    else:
+        H, Dh = cfg.n_heads, cfg.resolved_head_dim
+        q = qlinear.matmul(x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, S, H, Dh)
+        k, v = cross_kv
+        out = attention_core(q, k, v, causal=False,
+                             softcap=cfg.logit_softcap, ctx=ctx)
+    out = ctx.constrain(out, (ctx.data_axis, None, ctx.model_axis, None))
+    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y
+
+
+def gqa_decode(p, cfg, x, cache, *, window: int = 0, cross_kv=None):
+    """Single-token decode with a dense KV cache.
+
+    cache: {"k": (B, Tmax, KVH, Dh), "v": ..., "pos": (B,) int32}
+    Returns (y, new_cache).
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    pos = cache["pos"]                                    # (B,)
+    if cross_kv is None:
+        q, k, v = gqa_project_qkv(p, cfg, x, pos[:, None])
+        ck = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), pos)
+        cv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+            c, n, (i, 0, 0)))(cache["v"], v.astype(cache["v"].dtype), pos)
+        out = naive_attention(q, ck, cv, causal=True, q_offset=pos,
+                              window=window, softcap=cfg.logit_softcap)
+        cache = dict(cache, k=ck, v=cv, pos=pos + 1)
+    else:
+        H, Dh = cfg.n_heads, cfg.resolved_head_dim
+        q = qlinear.matmul(x, p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, 1, H, Dh)
+        k, v = cross_kv
+        out = naive_attention(q, k, v, causal=False,
+                              softcap=cfg.logit_softcap)
+        cache = dict(cache, pos=pos + 1)
+    y = qlinear.matmul(out.reshape(B, 1, -1), p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y, cache
+
+
+def gqa_prefill(p, cfg, x, *, window: int = 0, ctx: ShardCtx = NO_SHARD):
+    """Full-seq attention that also returns (k, v) for KV-cache capture."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    out = attention_core(q, k, v, causal=True, window=window,
+                         softcap=cfg.logit_softcap, ctx=ctx)
+    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], (D, m.q_lora_rank), dtype=dtype),
+        "q_norm": norm_init("rmsnorm", m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype=dtype),
+        "w_dkv": dense_init(ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype=dtype),
+        "kv_norm": norm_init("rmsnorm", m.kv_lora_rank, dtype),
+        "w_ukv": dense_init(ks[3], (m.kv_lora_rank,
+                                    H * (m.qk_nope_head_dim + m.v_head_dim)),
+                            dtype=dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, D), dtype=dtype),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = apply_norm("rmsnorm", p["q_norm"], qlinear.matmul(x, p["w_dq"]))
+    q = qlinear.matmul(cq, p["w_uq"]).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = qlinear.matmul(x, p["w_dkv"])               # (B,S,r+rope)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm("rmsnorm", p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope                    # k_rope: (B,S,1,rope)
+
+
+def _mla_expand_kv(p, cfg, c_kv):
+    m = cfg.mla
+    B, T, _ = c_kv.shape
+    H = cfg.n_heads
+    kv = qlinear.matmul(c_kv, p["w_ukv"]).reshape(
+        B, T, H, m.qk_nope_head_dim + m.v_head_dim)
+    return jnp.split(kv, [m.qk_nope_head_dim], axis=-1)    # k_nope, v
+
+
+def mla_apply(p, cfg, x, *, ctx: ShardCtx = NO_SHARD):
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.n_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    out = attention_core(q, k, v, causal=True, ctx=ctx)
+    out = ctx.constrain(out, (ctx.data_axis, None, ctx.model_axis, None))
+    return qlinear.matmul(out.reshape(B, S, -1), p["wo"])
+
+
+def mla_prefill(p, cfg, x, *, ctx: ShardCtx = NO_SHARD):
+    """MLA full-seq attention returning the latent cache (B, S, r + rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.n_heads,
+                                           m.qk_rope_head_dim))], axis=-1)
+    out = attention_core(q, k, v, causal=True, ctx=ctx)
+    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"])
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    return y, latent
+
+
+def mla_decode(p, cfg, x, cache, *, absorbed: bool = True):
+    """MLA decode with the **latent** KV cache (B, Tmax, r + rope).
+
+    ``absorbed=True`` uses the weight-absorption identity (DeepSeek-V2 §
+    'absorb'): score_nope = (q_nope @ W_ukv_k)ᵀ · c_kv, so the per-step cost
+    is O(T·r) instead of O(T·H·d) for re-expanding k_nope/v. This is both the
+    faithful deployment path and our hillclimb lever for decode cells.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    pos = cache["pos"]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, cfg, x, pos[:, None])
+    latent_new = jnp.concatenate([c_kv_new, k_rope_new[:, :, 0, :]], axis=-1)
+    lat = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0)))(cache["latent"],
+                       latent_new.astype(cache["latent"].dtype), pos)
+    cache = dict(cache, latent=lat, pos=pos + 1)
+    c_kv, k_rope = jnp.split(lat, [m.kv_lora_rank], axis=-1)  # (B,T,r),(B,T,rope)
+    T = c_kv.shape[1]
+    kv_len = cache["pos"]
+    if absorbed:
+        w_ukv = (p["w_ukv"].dequantize(jnp.float32)
+                 if qlinear.is_quantized(p["w_ukv"])
+                 else p["w_ukv"].astype(jnp.float32))
+        w_ukv = w_ukv.reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+        wk = w_ukv[..., :m.qk_nope_head_dim]               # (r,H,dk)
+        wv = w_ukv[..., m.qk_nope_head_dim:]               # (r,H,dv)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), wk)
+        s_nope = jnp.einsum("bshr,btr->bhst", q_abs, c_kv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                            k_rope.astype(jnp.float32))
+        scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+        s = (s_nope + s_rope) * scale
+        msk = jnp.arange(T)[None, None, None, :] < kv_len[:, None, None, None]
+        s = jnp.where(msk, s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", pr, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhd->bshd", ctx_lat, wv).astype(x.dtype)
+    else:
+        k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, T, H, m.qk_rope_head_dim))], axis=-1)
+        out = naive_attention(q, k, v, causal=False, kv_len=kv_len)
+    return qlinear.matmul(out.reshape(B, S, -1), p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_init(key, cfg, d_ff=None, dtype=jnp.float32):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (D, F), dtype=dtype),
+         "w_down": dense_init(ks[1], (F, D), dtype=dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (D, F), dtype=dtype)
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((F,), dtype)
+        p["b_down"] = jnp.zeros((D,), dtype)
+    return p
+
+
+def mlp_apply(p, cfg, x):
+    act = _ACTS[cfg.act]
+    up = qlinear.matmul(x, p["w_up"])
+    if cfg.mlp_bias:
+        up = up + p["b_up"]
+    if "w_gate" in p:
+        h = act(qlinear.matmul(x, p["w_gate"])) * up
+    else:
+        h = act(up)
+    y = qlinear.matmul(h, p["w_down"])
+    if cfg.mlp_bias:
+        y = y + p["b_down"]
+    return y

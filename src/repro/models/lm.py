@@ -1,0 +1,493 @@
+"""Generic decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families.
+
+Layers are organized into **segments**: maximal runs of a repeating layer-kind
+pattern. Each segment's parameters are stacked with a leading repeat dim and
+executed with ``lax.scan`` (keeps HLO size ~O(1) in depth — essential for the
+61-layer dry-runs). Examples:
+  olmo-1b       → [dense × 16]
+  deepseek-v3   → [mla_dense × 3, mla_moe × 58]
+  llama4        → [(dense, moe) pair × 24]
+  hymba         → [hybrid × 32]  (per-layer window as scanned operand)
+
+For MorphServe's per-layer precision heterogeneity the engine uses the
+**unrolled** path (`forward_unrolled` / layer lists), which shares the exact
+same block apply functions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, DENSE, MOE, SSM, HYBRID, VLM
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MO
+from repro.models.layers import NO_SHARD, ShardCtx
+from repro.quant import qlinear
+
+# ---------------------------------------------------------------------------
+# Layer-kind plan
+# ---------------------------------------------------------------------------
+def layer_kinds(cfg: ModelConfig) -> List[str]:
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.family == SSM:
+            kinds.append("mamba")
+        elif cfg.family == HYBRID:
+            kinds.append("hybrid")
+        elif cfg.moe is not None:
+            if i < cfg.moe.first_k_dense:
+                kinds.append("mla_dense" if cfg.mla else "dense")
+            elif (i - cfg.moe.first_k_dense) % cfg.moe.moe_layer_step \
+                    == cfg.moe.moe_layer_step - 1:
+                kinds.append("mla_moe" if cfg.mla else "moe")
+            else:
+                kinds.append("mla_dense" if cfg.mla else "dense")
+        elif cfg.mla is not None:
+            kinds.append("mla_dense")
+        else:
+            kinds.append("dense")
+    return kinds
+
+
+def segment_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(pattern, repeats)] — pattern is a tuple of kinds executed per step.
+
+    Segments split on BOTH layer kind and sliding-window size, so each
+    segment's window is a static Python int (enables the windowed-prefill
+    attention path for hymba's global/local interleave)."""
+    kinds = layer_kinds(cfg)
+    n = len(kinds)
+    keys = [(kinds[i], layer_window(cfg, i)) for i in range(n)]
+    segs: List[Tuple[Tuple[str, ...], int]] = []
+    i = 0
+    while i < n:
+        # longest run of a single (kind, window)
+        j = i
+        while j < n and keys[j] == keys[i]:
+            j += 1
+        run = j - i
+        # check alternating pattern (a, b, a, b, ...) from i
+        if run == 1 and i + 1 < n and keys[i + 1] != keys[i]:
+            a, b = keys[i], keys[i + 1]
+            k = i
+            while k + 1 < n and keys[k] == a and keys[k + 1] == b:
+                k += 2
+            pairs = (k - i) // 2
+            if pairs >= 2:
+                segs.append(((a[0], b[0]), pairs))
+                i = i + 2 * pairs
+                continue
+        segs.append(((kinds[i],), run))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply dispatch
+# ---------------------------------------------------------------------------
+def _attn_init(key, cfg, dtype):
+    if cfg.mla is not None:
+        return L.mla_init(key, cfg, dtype)
+    return L.gqa_init(key, cfg, dtype)
+
+
+def block_init(kind: str, key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+                "mixer": M.mamba_init(ks[0], cfg, dtype)}
+    if kind == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        return {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+                "attn": L.gqa_init(ks[0], cfg, dtype),
+                "ssm": M.mamba_init(ks[1], cfg, dtype),
+                "norm_a": L.norm_init("rmsnorm", cfg.d_model, dtype),
+                "norm_s": L.norm_init("rmsnorm", cfg.d_model, dtype),
+                "beta_a": jnp.ones((), jnp.float32),
+                "beta_s": jnp.ones((), jnp.float32),
+                "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+                "mlp": L.mlp_init(ks[2], cfg, dtype=dtype)}
+    p = {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+         "attn": _attn_init(ks[0], cfg, dtype)}
+    if not cfg.parallel_block:
+        p["ln2"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+    if kind in ("moe", "mla_moe"):
+        p["moe"] = MO.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg, dtype=dtype)
+    return p
+
+
+def _attn_apply(p, cfg, x, *, window, ctx):
+    if cfg.mla is not None:
+        return L.mla_apply(p, cfg, x, ctx=ctx)
+    return L.gqa_apply(p, cfg, x, window=window, ctx=ctx)
+
+
+def block_apply(kind: str, p, cfg: ModelConfig, x, *, window: int = 0,
+                ctx: ShardCtx = NO_SHARD, moe_cf: float = 1.25):
+    """Full-sequence block. Returns (x, aux) where aux carries MoE stats."""
+    aux = {}
+    if kind == "mamba":
+        return x + M.mamba_apply(p["mixer"], cfg,
+                                 L.apply_norm(cfg.norm, p["norm"], x),
+                                 ctx=ctx), aux
+    if kind == "hybrid":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        a = L.gqa_apply(p["attn"], cfg, h, window=window, ctx=ctx)
+        s = M.mamba_apply(p["ssm"], cfg, h, ctx=ctx)
+        mixed = 0.5 * (p["beta_a"] * L.apply_norm("rmsnorm", p["norm_a"], a)
+                       + p["beta_s"] * L.apply_norm("rmsnorm", p["norm_s"], s))
+        x = x + mixed.astype(x.dtype)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        return x + L.mlp_apply(p["mlp"], cfg, h2), aux
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    attn_out = _attn_apply(p["attn"], cfg, h, window=window, ctx=ctx)
+    if cfg.parallel_block:
+        # command-r: x + attn(ln x) + mlp(ln x), single shared norm
+        return x + attn_out + L.mlp_apply(p["mlp"], cfg, h), aux
+    x = x + attn_out
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, aux = MO.moe_apply(p["moe"], cfg, h2, ctx=ctx,
+                              capacity_factor=moe_cf)
+        return x + y, aux
+    return x + L.mlp_apply(p["mlp"], cfg, h2), aux
+
+
+def layer_window(cfg: ModelConfig, i: int, seq_hint: int = 0) -> int:
+    """Sliding window for layer i (0 = full attention)."""
+    if cfg.sliding_window and i not in cfg.global_attn_layers:
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    segs = segment_plan(cfg)
+    seg_params = []
+    li = 0
+    for pattern, reps in segs:
+        stacked = []
+        for _ in range(reps):
+            step_p = tuple(block_init(kind, ks[li + o], cfg, dtype)
+                           for o, kind in enumerate(pattern))
+            stacked.append(step_p)
+            li += len(pattern)
+        seg_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+                          if reps > 1 else stacked[0])
+    params = {
+        "embed": L.embed_init(ks[-1], (cfg.vocab, cfg.d_model), dtype),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "segments": seg_params,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[-2], (cfg.d_model, cfg.vocab),
+                                         dtype=dtype)
+    if cfg.family == VLM:
+        params["projector"] = {
+            "w": L.dense_init(ks[-3], (cfg.frontend_dim, cfg.d_model),
+                              dtype=dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype)}
+    return params
+
+
+def _windows_for_segment(cfg, seg_idx, pattern, reps, li0):
+    """Static per-offset windows (segments are split on window changes)."""
+    return tuple(layer_window(cfg, li0 + o) for o in range(len(pattern)))
+
+
+def embed_tokens(cfg, params, tokens, frontend=None):
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == VLM:
+        assert frontend is not None, "vlm needs patch embeddings"
+        pe = qlinear.matmul(frontend, params["projector"]["w"]) \
+            + params["projector"]["b"]
+        emb = jnp.concatenate([pe.astype(emb.dtype), emb], axis=1)
+    return emb
+
+
+def unembed(cfg, params, x):
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return jnp.matmul(x, params["embed"].T.astype(x.dtype))
+    return qlinear.matmul(x, params["lm_head"])
+
+
+def forward(cfg: ModelConfig, params, tokens, *, frontend=None,
+            ctx: ShardCtx = NO_SHARD, remat: bool = False,
+            collect_aux: bool = False, moe_cf: float = 1.25):
+    """Full-sequence logits (train / prefill). tokens: (B, S_text)."""
+    x = embed_tokens(cfg, params, tokens, frontend)
+    x = ctx.constrain(x, (ctx.data_axis, None, None))
+    segs = segment_plan(cfg)
+    li = 0
+    aux_acc = []
+    for seg_idx, ((pattern, reps), seg_p) in enumerate(zip(segs,
+                                                           params["segments"])):
+        wins = _windows_for_segment(cfg, seg_idx, pattern, reps, li)
+
+        def step(x, p_step, _pattern=pattern, _wins=wins):
+            auxes = []
+            for o, kind in enumerate(_pattern):
+                x, aux = block_apply(kind, p_step[o], cfg, x,
+                                     window=_wins[o], ctx=ctx,
+                                     moe_cf=moe_cf)
+                auxes.append(aux.get("expert_load"))
+            loads = [a for a in auxes if a is not None]
+            return x, (jnp.stack(loads) if loads else jnp.zeros((1,)))
+
+        if remat:
+            from repro.launch.knobs import KNOBS
+            if KNOBS.remat_policy == "dots":
+                step = jax.checkpoint(
+                    step, policy=jax.checkpoint_policies.dots_saveable)
+            elif KNOBS.remat_policy != "none":
+                step = jax.checkpoint(step)
+        if reps > 1:
+            x, aux = jax.lax.scan(step, x, seg_p)
+        else:
+            x, aux = step(x, seg_p)
+        aux_acc.append(aux)
+        li += len(pattern) * reps
+    logits = unembed(cfg, params, x)
+    if collect_aux:
+        return logits, aux_acc
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Unrolled (per-layer list) path — used by the serving engine for morphing
+# ---------------------------------------------------------------------------
+def params_to_layer_list(cfg: ModelConfig, params) -> List[Tuple[str, Any]]:
+    """Flatten segment params into [(kind, layer_params)] of length L."""
+    segs = segment_plan(cfg)
+    out = []
+    for (pattern, reps), seg_p in zip(segs, params["segments"]):
+        for r in range(reps):
+            for o, kind in enumerate(pattern):
+                if reps > 1:
+                    lp = jax.tree.map(lambda a, _r=r: a[_r], seg_p[o])
+                else:
+                    lp = seg_p[o]
+                out.append((kind, lp))
+    return out
+
+
+def layer_list_to_params(cfg: ModelConfig, layer_list, params) -> Dict:
+    """Inverse of params_to_layer_list (restacks; requires homogeneous
+    precision within a segment — used by tests, not the engine)."""
+    segs = segment_plan(cfg)
+    seg_params = []
+    li = 0
+    for pattern, reps in segs:
+        stacked = []
+        for r in range(reps):
+            stacked.append(tuple(layer_list[li + r * len(pattern) + o][1]
+                                 for o in range(len(pattern))))
+        seg_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+                          if reps > 1 else stacked[0])
+        li += len(pattern) * reps
+    return dict(params, segments=seg_params)
+
+
+def forward_unrolled(cfg: ModelConfig, params, layer_list, tokens, *,
+                     frontend=None, ctx: ShardCtx = NO_SHARD):
+    x = embed_tokens(cfg, params, tokens, frontend)
+    for i, (kind, lp) in enumerate(layer_list):
+        x, _ = block_apply(kind, lp, cfg, x, window=layer_window(cfg, i),
+                           ctx=ctx)
+    return unembed(cfg, params, x)
+
+
+def block_prefill(kind: str, p, cfg: ModelConfig, x, *, window: int = 0,
+                  ctx: ShardCtx = NO_SHARD):
+    """Full-seq block that also returns the cache payload for this layer:
+    GQA → {"k","v"}; MLA → {"latent"}; mamba/hybrid → ssm states too."""
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, st = M.mamba_apply(p["mixer"], cfg, h, ctx=ctx, return_state=True)
+        return x + y, {"ssm_conv": st["conv"], "ssm_ssm": st["ssm"]}
+    if kind == "hybrid":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        a, (k, v) = L.gqa_prefill(p["attn"], cfg, h, window=window, ctx=ctx)
+        s, st = M.mamba_apply(p["ssm"], cfg, h, ctx=ctx, return_state=True)
+        mixed = 0.5 * (p["beta_a"] * L.apply_norm("rmsnorm", p["norm_a"], a)
+                       + p["beta_s"] * L.apply_norm("rmsnorm", p["norm_s"], s))
+        x = x + mixed.astype(x.dtype)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        x = x + L.mlp_apply(p["mlp"], cfg, h2)
+        return x, {"k": k, "v": v, "ssm_conv": st["conv"],
+                   "ssm_ssm": st["ssm"]}
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.mla is not None:
+        attn_out, latent = L.mla_prefill(p["attn"], cfg, h, ctx=ctx)
+        payload = {"latent": latent}
+    else:
+        attn_out, (k, v) = L.gqa_prefill(p["attn"], cfg, h, window=window,
+                                         ctx=ctx)
+        payload = {"k": k, "v": v}
+    if cfg.parallel_block:
+        return x + attn_out + L.mlp_apply(p["mlp"], cfg, h), payload
+    x = x + attn_out
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, _ = MO.moe_apply(p["moe"], cfg, h2, ctx=ctx, capacity_factor=-1.0)
+        return x + y, payload
+    return x + L.mlp_apply(p["mlp"], cfg, h2), payload
+
+
+def prefill_collect(cfg: ModelConfig, params, layer_list, tokens, *,
+                    frontend=None, ctx: ShardCtx = NO_SHARD):
+    """Unrolled prefill returning (logits, [per-layer cache payload]).
+
+    Used by the engine to fill the paged KV pool after admission.
+    """
+    x = embed_tokens(cfg, params, tokens, frontend)
+    payloads = []
+    for i, (kind, lp) in enumerate(layer_list):
+        x, payload = block_prefill(kind, lp, cfg, x,
+                                   window=layer_window(cfg, i), ctx=ctx)
+        payloads.append(payload)
+    return unembed(cfg, params, x), payloads
+
+
+# ---------------------------------------------------------------------------
+# Decode path (dense per-layer KV caches, stacked per segment, lax.scan)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = layer_kinds(cfg)
+    caches = []
+    for kind in kinds:
+        caches.append(_layer_cache(cfg, kind, batch, max_seq, dtype))
+    # stack per segment
+    segs = segment_plan(cfg)
+    out = []
+    li = 0
+    for pattern, reps in segs:
+        per_off = []
+        for o in range(len(pattern)):
+            layer_caches = [caches[li + r * len(pattern) + o]
+                            for r in range(reps)]
+            per_off.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *layer_caches)
+                           if reps > 1 else layer_caches[0])
+        out.append(tuple(per_off))
+        li += len(pattern) * reps
+    return {"segments": out, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _layer_cache(cfg, kind, batch, max_seq, dtype):
+    Dh = cfg.resolved_head_dim
+    if kind == "mamba":
+        return M.mamba_init_state(cfg, batch, jnp.float32)
+    if kind == "hybrid":
+        st = M.mamba_init_state(cfg, batch, jnp.float32)
+        return {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, Dh), dtype),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, Dh), dtype),
+                **{f"ssm_{k}": v for k, v in st.items()}}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"latent": jnp.zeros(
+            (batch, max_seq, m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+    return {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, Dh), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, Dh), dtype)}
+
+
+def block_decode(kind: str, p, cfg: ModelConfig, x, cache, pos, *,
+                 window: int = 0):
+    """Single-token decode for one block. Returns (x, new_cache)."""
+    if kind == "mamba":
+        h = L.apply_norm(cfg.norm, p["norm"], x)
+        y, new_state = M.mamba_decode(p["mixer"], cfg, h, cache)
+        return x + y, new_state
+    if kind == "hybrid":
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        attn_cache = {"k": cache["k"], "v": cache["v"], "pos": pos}
+        a, attn_cache = L.gqa_decode(p["attn"], cfg, h, attn_cache,
+                                     window=window)
+        ssm_state = {"conv": cache["ssm_conv"], "ssm": cache["ssm_ssm"]}
+        s, ssm_state = M.mamba_decode(p["ssm"], cfg, h, ssm_state)
+        mixed = 0.5 * (p["beta_a"] * L.apply_norm("rmsnorm", p["norm_a"], a)
+                       + p["beta_s"] * L.apply_norm("rmsnorm", p["norm_s"], s))
+        x = x + mixed.astype(x.dtype)
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        x = x + L.mlp_apply(p["mlp"], cfg, h2)
+        return x, {"k": attn_cache["k"], "v": attn_cache["v"],
+                   "ssm_conv": ssm_state["conv"], "ssm_ssm": ssm_state["ssm"]}
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.mla is not None:
+        mla_cache = {"latent": cache["latent"], "pos": pos}
+        attn_out, mla_cache = L.mla_decode(p["attn"], cfg, h, mla_cache)
+        new_cache = {"latent": mla_cache["latent"]}
+    else:
+        attn_cache = {"k": cache["k"], "v": cache["v"], "pos": pos}
+        attn_out, attn_cache = L.gqa_decode(p["attn"], cfg, h, attn_cache,
+                                            window=window)
+        new_cache = {"k": attn_cache["k"], "v": attn_cache["v"]}
+    if cfg.parallel_block:
+        return x + attn_out + L.mlp_apply(p["mlp"], cfg, h), new_cache
+    x = x + attn_out
+    h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, _ = MO.moe_apply(p["moe"], cfg, h2, capacity_factor=-1.0)
+        return x + y, new_cache
+    return x + L.mlp_apply(p["mlp"], cfg, h2), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *,
+                ctx: ShardCtx = NO_SHARD):
+    """One decode step over the whole stack (scan path). tokens: (B, 1)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+    segs = segment_plan(cfg)
+    new_seg_caches = []
+    li = 0
+    for (pattern, reps), seg_p, seg_c in zip(segs, params["segments"],
+                                             cache["segments"]):
+        wins = _windows_for_segment(cfg, None, pattern, reps, li)
+
+        def step(x, operand, _pattern=pattern, _wins=wins):
+            p_step, c_step = operand
+            new_cs = []
+            for o, kind in enumerate(_pattern):
+                x, nc = block_decode(kind, p_step[o], cfg, x, c_step[o], pos,
+                                     window=_wins[o])
+                new_cs.append(nc)
+            return x, tuple(new_cs)
+
+        if reps > 1:
+            x, new_c = jax.lax.scan(step, x, (seg_p, seg_c))
+        else:
+            x, new_c = step(x, (seg_p, seg_c))
+        new_seg_caches.append(new_c)
+        li += len(pattern) * reps
+    logits = unembed(cfg, params, x)
+    return logits, {"segments": new_seg_caches, "pos": pos + 1}
+
+
+def decode_step_unrolled(cfg: ModelConfig, params, layer_list, layer_caches,
+                         pos, tokens):
+    """Engine-side decode: python loop over possibly mixed-precision layers.
+
+    layer_caches: list of per-layer cache dicts; pos: (B,). Returns
+    (logits, new_layer_caches).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_caches = []
+    for i, (kind, lp) in enumerate(layer_list):
+        x, nc = block_decode(kind, lp, cfg, x, layer_caches[i], pos,
+                             window=layer_window(cfg, i))
+        new_caches.append(nc)
+    return unembed(cfg, params, x), new_caches

@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD — state-space duality) block, pure JAX.
+
+Full-sequence path uses the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060
+§6): within-chunk quadratic attention-like term + inter-chunk recurrence
+carried by ``lax.scan``. Decode path is the O(1) recurrent update. Both share
+parameters and agree numerically (tested).
+
+Layout: in_proj emits [z, x, B, C, dt]; depthwise causal conv over (x, B, C);
+heads H = d_inner / head_dim; A is scalar per head (Mamba-2 restriction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ShardCtx, NO_SHARD, dense_init, norm_init,
+                                 apply_norm)
+from repro.quant import qlinear
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def mamba_init(key, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_ch = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), minval=jnp.log(1e-3),
+                                    maxval=jnp.log(1e-1)))
+    return {
+        "in_proj": dense_init(ks[0], (D, proj_out), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_ch), scale=0.2,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gnorm": norm_init("rmsnorm", d_inner, dtype),
+        "out_proj": dense_init(ks[3], (d_inner, D), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    gN = s.n_groups * s.d_state
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gN, 2 * d_inner + 2 * gN],
+        axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(conv_w, conv_b, u):
+    """Depthwise causal conv. u: (B, S, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out + conv_b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (already softplus'd); A: (h,) negative;
+    Bm, Cm: (b, s, g, n). Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    # expand groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)                     # (b,s,h,n)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+    dA = dtc * A[None, None, None, :]                    # (b,nc,c,h) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+
+    # --- intra-chunk (quadratic) term -------------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,c,c,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bzihn,bzjhn->bzijh", Cc, Bc)     # (b,nc,c,c,h)
+    M = scores * L
+    y_intra = jnp.einsum("bzijh,bzjh,bzjhp->bzihp", M, dtc, xc)
+
+    # --- chunk states + inter-chunk recurrence ----------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,c,h)
+    chunk_state = jnp.einsum("bzchn,bzch,bzch,bzchp->bzhpn",
+                             Bc, dtc, decay_to_end, xc)   # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))            # (b,nc,h)
+
+    def scan_fn(state, inp):
+        cs, cd = inp                                      # (b,h,p,n),(b,h)
+        out_state = state                                 # state entering chunk
+        new_state = state * cd[..., None, None] + cs
+        return new_state, out_state
+
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+          else init_state)
+    final_state, states_in = jax.lax.scan(
+        scan_fn, s0,
+        (chunk_state.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bzchn,bzch,bzhpn->bzchp",
+                         Cc, jnp.exp(cum), states_in)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba_apply(p, cfg, x, *, ctx: ShardCtx = NO_SHARD, init_state=None,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, D) -> (B, S, D)."""
+    s = cfg.ssm
+    B_, S, D = x.shape
+    d_inner, H, conv_ch = _dims(cfg)
+    proj = qlinear.matmul(x, p["in_proj"])
+    z, xin, Bc, Cc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(p["conv_w"], p["conv_b"], conv_in)
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state],
+                            axis=-1)
+    xh = xin.reshape(B_, S, H, s.head_dim).astype(jnp.float32)
+    Bm = Bc.reshape(B_, S, s.n_groups, s.d_state).astype(jnp.float32)
+    Cm = Cc.reshape(B_, S, s.n_groups, s.d_state).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    from repro.launch.knobs import KNOBS
+    chunk = min(KNOBS.ssd_chunk or s.chunk_size, S)
+    while S % chunk:
+        chunk //= 2
+    y, state = ssd_chunked(xh, dtv, A, Bm, Cm, chunk=chunk,
+                           init_state=init_state)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = apply_norm("rmsnorm", p["gnorm"], y * jax.nn.silu(z))
+    out = qlinear.matmul(y, p["out_proj"])
+    if return_state:
+        # conv tail = last (d_conv-1) pre-conv inputs, for decode continuation
+        tail = conv_in[:, -(s.d_conv - 1):, :].astype(jnp.float32)
+        return out, {"conv": tail, "ssm": state}
+    return out
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), dtype),
+    }
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-token recurrent step. x: (B, 1, D)."""
+    s = cfg.ssm
+    B_, S, D = x.shape
+    assert S == 1
+    d_inner, H, conv_ch = _dims(cfg)
+    proj = qlinear.matmul(x[:, 0], p["in_proj"])           # (B, proj)
+    z, xin, Bc, Cc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)      # (B, conv_ch)
+    conv_buf = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])
+    xin, Bc, Cc = jnp.split(conv_out,
+                            [d_inner, d_inner + s.n_groups * s.d_state],
+                            axis=-1)
+    xh = xin.reshape(B_, H, s.head_dim).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bm = jnp.repeat(Bc.reshape(B_, s.n_groups, s.d_state), rep, 1)
+    Cm = jnp.repeat(Cc.reshape(B_, s.n_groups, s.d_state), rep, 1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A[None, :])                          # (B,H)
+    ssm = (state["ssm"] * dA[..., None, None]
+           + jnp.einsum("bh,bhp,bhn->bhpn", dtv, xh, Bm.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, Cm.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner).astype(x.dtype)
+    y = apply_norm("rmsnorm", p["gnorm"], y * jax.nn.silu(z))
+    out = qlinear.matmul(y, p["out_proj"])[:, None]
+    new_state = {"conv": conv_buf[:, 1:], "ssm": ssm}
+    return out, new_state

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with capacity-based grouped dispatch.
+
+TPU-native implementation: tokens are sorted by expert, gathered into an
+(E, C, D) buffer, batched-matmul'd against stacked expert weights, and
+combined back. Capacity overflow drops tokens (standard GShard/Switch
+semantics). Supports DeepSeek-V3 style shared experts, sigmoid scoring with
+aux-loss-free bias balancing, and Llama-4 style top-1 routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ShardCtx, NO_SHARD, dense_init, mlp_init,
+                                 mlp_apply, _ACTS)
+from repro.quant import qlinear
+
+
+def moe_init(key, cfg, dtype):
+    mc = cfg.moe
+    D, E, F = cfg.d_model, mc.n_routed_experts, mc.d_ff_expert
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (D, E), scale=0.02, dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype=dtype),
+        "w_up": dense_init(ks[2], (E, D, F), dtype=dtype),
+        "w_down": dense_init(ks[3], (E, F, D), dtype=dtype),
+    }
+    if mc.router_aux_free_bias:
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if mc.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=F * mc.n_shared_experts, dtype=dtype)
+    return p
+
+
+def _expert_matmul(xg, w):
+    """(E, C, D) x (E, D, F) -> (E, C, F); w may be a stacked QTensor."""
+    if qlinear.is_quantized(w):
+        w = w.dequantize(xg.dtype)
+    return jnp.einsum("ecd,edf->ecf", xg, w.astype(xg.dtype))
+
+
+def moe_apply(p, cfg, x, *, capacity_factor: float = 1.25,
+              ctx: ShardCtx = NO_SHARD):
+    """x: (B, S, D) -> (B, S, D), plus aux dict (load stats).
+
+    ``capacity_factor <= 0`` means no-drop capacity (C = T·K) — exact MoE,
+    used at decode where T = batch is small and for correctness tests.
+    """
+    mc = cfg.moe
+    B, S, D = x.shape
+    E, K = mc.n_routed_experts, mc.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # (T, E)
+    if mc.router_aux_free_bias:
+        # DeepSeek-V3: bias affects *selection* only, not combine weights.
+        sel_scores = jax.nn.sigmoid(logits) + p["router_bias"]
+        gate_scores = jax.nn.sigmoid(logits)
+    else:
+        sel_scores = logits
+        gate_scores = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(sel_scores, K)              # (T, K)
+    gates = jnp.take_along_axis(gate_scores, top_idx, axis=1)  # (T, K)
+    if mc.router_aux_free_bias:
+        gates = gates / (gates.sum(axis=-1, keepdims=True) + 1e-9)
+        gates = gates * mc.routed_scaling_factor
+    elif K > 1:
+        gates = gates / (gates.sum(axis=-1, keepdims=True) + 1e-9)
+
+    if capacity_factor <= 0:
+        C = T * K
+    else:
+        C = min(max(int(T * K / E * capacity_factor + 0.999), 1), T * K)
+    # Rank each (token, k) within its expert's queue via stable sort.
+    flat_e = top_idx.reshape(-1)                           # (T*K,)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))     # (E,)
+    rank_sorted = jnp.arange(T * K) - starts[sorted_e]
+    pos = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = pos < C
+    dest = flat_e * C + jnp.where(keep, pos, 0)
+
+    xg = jnp.zeros((E * C, D), x.dtype).at[dest].add(
+        jnp.where(keep[:, None], xf[flat_tok], 0))
+    xg = xg.reshape(E, C, D)
+    # §Perf iteration (EXPERIMENTS.md): align the dispatch buffer's expert
+    # sharding with the expert weights' EP placement — a mismatch forces a
+    # per-layer resharding of the (huge) expert weights instead of the
+    # (small) dispatch buffer.
+    from repro.launch.knobs import KNOBS
+    if KNOBS.moe_ep_align and ctx.data_axis and ctx.model_axis:
+        espec = ((ctx.data_axis, ctx.model_axis), None, None)
+    else:
+        espec = (ctx.model_axis, ctx.data_axis, None)
+    xg = ctx.constrain(xg, espec)
+
+    act = _ACTS[cfg.act]
+    h = act(_expert_matmul(xg, p["w_gate"])) * _expert_matmul(xg, p["w_up"])
+    h = ctx.constrain(h, espec)
+    yg = _expert_matmul(h, p["w_down"]).reshape(E * C, D)
+    yg = ctx.constrain(yg, (espec[0], None))
+
+    contrib = yg[dest] * (keep * gates.reshape(-1))[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[flat_tok].add(contrib)
+
+    if mc.n_shared_experts:
+        y = y + mlp_apply(p["shared"], cfg, xf)
+
+    load = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * K)
+    aux = {"expert_load": load,
+           "dropped_frac": 1.0 - keep.mean(),
+           "router_entropy": -(gate_scores *
+                               jnp.log(gate_scores + 1e-9)).sum(-1).mean()}
+    return y.reshape(B, S, D), aux
+
+
+def load_balance_loss(aux, cfg) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum(load_frac * mean_gate_frac)."""
+    load = aux["expert_load"]
+    E = load.shape[0]
+    return E * jnp.sum(load * load)
+
+
+def update_aux_free_bias(p, aux, *, lr: float = 1e-3):
+    """DeepSeek-V3 aux-loss-free balancing: nudge selection bias toward
+    underloaded experts (done outside the gradient path)."""
+    load = aux["expert_load"]
+    target = 1.0 / load.shape[0]
+    new_bias = p["router_bias"] + lr * jnp.sign(target - load)
+    return dict(p, router_bias=new_bias)

@@ -1,0 +1,84 @@
+"""Model registry: uniform API over the decoder-only and enc-dec families.
+
+    api = get_model(cfg)
+    params = api.init_params(cfg, key)
+    logits = api.forward(cfg, params, **api.dummy_inputs(cfg, B, S))
+    cache  = api.init_cache(cfg, batch, max_seq)
+    logits, cache = api.decode_step(cfg, params, cache, tokens)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ENCDEC, VLM
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    forward: Callable              # (cfg, params, tokens, *, frontend, ctx, remat)
+    init_cache: Callable           # (cfg, batch, max_seq, dtype)
+    decode_step: Callable          # (cfg, params, cache, tokens, *, ctx)
+    needs_frontend: bool
+    start_cache: Optional[Callable] = None   # encdec: fill cross-attn KV
+
+
+_LM_API = ModelAPI(lm.init_params, lm.forward, lm.init_cache, lm.decode_step,
+                   needs_frontend=False)
+_VLM_API = dataclasses.replace(_LM_API, needs_frontend=True)
+_ENCDEC_API = ModelAPI(encdec.init_params, encdec.forward, encdec.init_cache,
+                       encdec.decode_step, needs_frontend=True,
+                       start_cache=encdec.start_cache)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == ENCDEC:
+        return _ENCDEC_API
+    if cfg.family == VLM:
+        return _VLM_API
+    return _LM_API
+
+
+def frontend_shape(cfg: ModelConfig, batch: int):
+    if cfg.family == ENCDEC:
+        return (batch, cfg.encoder_seq, cfg.frontend_dim)
+    if cfg.family == VLM:
+        return (batch, cfg.n_image_tokens, cfg.frontend_dim)
+    return None
+
+
+def text_seq_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM cells count image tokens toward seq_len (DESIGN.md §4)."""
+    if cfg.family == VLM:
+        return max(seq_len - cfg.n_image_tokens, 1)
+    return seq_len
+
+
+def dummy_inputs(cfg: ModelConfig, batch: int, seq_len: int, key=None,
+                 dtype=None):
+    """Concrete small inputs for smoke tests."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    s_text = text_seq_len(cfg, seq_len)
+    tokens = jax.random.randint(k1, (batch, s_text), 0, cfg.vocab)
+    out = {"tokens": tokens}
+    fs = frontend_shape(cfg, batch)
+    if fs is not None:
+        out["frontend"] = jax.random.normal(k2, fs,
+                                            dtype or jnp.dtype(cfg.dtype))
+    return out
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))

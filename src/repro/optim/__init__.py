@@ -1,0 +1,2 @@
+from repro.optim import adamw, compression
+from repro.optim.adamw import OptConfig, OptState

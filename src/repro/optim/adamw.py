@@ -1,0 +1,72 @@
+"""AdamW + cosine schedule + global-norm clipping (pure JAX, pytree-generic)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init(params) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), z,
+                    jax.tree.map(jnp.copy, z))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: OptConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, stats)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ +
+                     (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state.v, grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** step), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** step), v)
+
+    def upd(p, mh_, vh_):
+        delta = mh_ / (jnp.sqrt(vh_) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mh, vh)
+    return new_params, OptState(step, m, v), {"grad_norm": gn, "lr": lr}

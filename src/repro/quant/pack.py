@@ -1,0 +1,112 @@
+"""Bit-packing for INT8 / INT4 / INT3 weight tensors.
+
+Layout convention (matches the Pallas ``wNa16`` kernel):
+  * quantization is **asymmetric, per-group along K** (the contraction dim)
+  * ``q = clip(round(w / s) + z, 0, 2**bits - 1)`` stored unsigned
+  * int8: (K, N) uint8
+  * int4: (K//2, N) uint8 — low nibble = even k, high nibble = odd k
+  * int3: (K//8, N) uint32 — eight 3-bit fields per word (bits [3j, 3j+3))
+  * scales/zeros: (K // group, N)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (8, 4, 3)
+
+
+def quantize_groupwise(w, bits: int, group: int):
+    """Quantize ``w`` (K, N) → (q_uint (K, N), scales (K//g, N), zeros (K//g, N)).
+
+    Asymmetric min/max per (group, column). ``zeros`` is the integer zero
+    point (float-stored for exact dequant math).
+    """
+    K, N = w.shape
+    assert K % group == 0, f"K={K} not divisible by group={group}"
+    qmax = 2**bits - 1
+    wg = w.reshape(K // group, group, N)
+    lo = wg.min(axis=1)                          # (K//g, N)
+    hi = wg.max(axis=1)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8).astype(jnp.float32)
+    zero = jnp.round(-lo / scale).clip(0, qmax)
+    q = jnp.round(wg / scale[:, None, :] + zero[:, None, :]).clip(0, qmax)
+    return q.reshape(K, N).astype(jnp.uint8), scale, zero.astype(jnp.float32)
+
+
+def dequantize_groupwise(q, scale, zero, group: int, dtype=jnp.float32):
+    """Dequantize (..., K, N) with per-group (..., K//g, N) scales/zeros."""
+    K, N = q.shape[-2], q.shape[-1]
+    qg = q.reshape(*q.shape[:-2], K // group, group, N).astype(jnp.float32)
+    w = (qg - zero[..., :, None, :]) * scale[..., :, None, :]
+    return w.reshape(*q.shape[:-2], K, N).astype(dtype)
+
+
+# -- int4 ----------------------------------------------------------------------
+# All pack/unpack functions operate on the last two dims (..., K, N) so
+# stacked expert weights (E, K, N) pack in one call.
+def pack_int4(q):
+    K = q.shape[-2]
+    assert K % 2 == 0
+    lo = q[..., 0::2, :].astype(jnp.uint8)
+    hi = q[..., 1::2, :].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)          # (..., K//2, N)
+
+
+def unpack_int4(packed, K: int):
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=-2)
+    return out.reshape(*packed.shape[:-2], K, packed.shape[-1]).astype(jnp.uint8)
+
+
+# -- int3 ----------------------------------------------------------------------
+def pack_int3(q):
+    K = q.shape[-2]
+    N = q.shape[-1]
+    assert K % 8 == 0
+    qg = q.reshape(*q.shape[:-2], K // 8, 8, N).astype(jnp.uint32)
+    word = jnp.zeros((*q.shape[:-2], K // 8, N), dtype=jnp.uint32)
+    for j in range(8):
+        word = word | (qg[..., j, :] << (3 * j))
+    return word                                          # (..., K//8, N) uint32
+
+
+def unpack_int3(packed, K: int):
+    parts = [((packed >> (3 * j)) & 0x7).astype(jnp.uint8) for j in range(8)]
+    out = jnp.stack(parts, axis=-2)
+    return out.reshape(*packed.shape[:-2], K, packed.shape[-1])
+
+
+# -- int8 ----------------------------------------------------------------------
+def pack_int8(q):
+    return q.astype(jnp.uint8)
+
+
+def unpack_int8(packed, K: int):
+    return packed
+
+
+_PACK = {8: pack_int8, 4: pack_int4, 3: pack_int3}
+_UNPACK = {8: unpack_int8, 4: unpack_int4, 3: unpack_int3}
+
+
+def pack(q, bits: int):
+    return _PACK[bits](q)
+
+
+def unpack(packed, bits: int, K: int):
+    return _UNPACK[bits](packed, K)
+
+
+def packed_nbytes(K: int, N: int, bits: int, group: int,
+                  scale_bytes: int = 4) -> int:
+    """Device bytes of a packed (K, N) weight incl. scales+zeros."""
+    if bits == 8:
+        body = K * N
+    elif bits == 4:
+        body = K // 2 * N
+    elif bits == 3:
+        body = K // 8 * N * 4
+    else:
+        raise ValueError(bits)
+    return body + 2 * (K // group) * N * scale_bytes

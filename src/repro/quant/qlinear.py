@@ -1,0 +1,121 @@
+"""Quantized weight container + dispatching matmul.
+
+``QTensor`` is a pytree-registered stand-in for a dense (K, N) weight. Any
+``linear()`` call in the model zoo dispatches on the leaf type, so swapping a
+layer between precisions is a pure pytree substitution — the mechanism behind
+MorphServe's LayerSwapper on TPU (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import pack as packing
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """Packed, group-quantized weight of logical shape (K, N)."""
+
+    def __init__(self, packed, scales, zeros, *, bits: int, group: int,
+                 K: int, N: int, out_dtype=jnp.float32, inv_act=None):
+        self.packed = packed
+        self.scales = scales
+        self.zeros = zeros
+        self.bits = bits
+        self.group = group
+        self.K = K
+        self.N = N
+        self.out_dtype = out_dtype
+        # AWQ equalization: weights were scaled by ``act_scale`` before
+        # quantization, so activations must be multiplied by ``inv_act``.
+        self.inv_act = inv_act
+
+    # pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return ((self.packed, self.scales, self.zeros, self.inv_act),
+                (self.bits, self.group, self.K, self.N, self.out_dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales, zeros, inv_act = children
+        bits, group, K, N, out_dtype = aux
+        return cls(packed, scales, zeros, bits=bits, group=group, K=K, N=N,
+                   out_dtype=out_dtype, inv_act=inv_act)
+
+    # ----------------------------------------------------------------------
+    @property
+    def shape(self):
+        return (self.K, self.N)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.packed.size * self.packed.dtype.itemsize
+                + self.scales.size * self.scales.dtype.itemsize
+                + self.zeros.size * self.zeros.dtype.itemsize)
+
+    def dequantize(self, dtype=None):
+        q = packing.unpack(self.packed, self.bits, self.K)
+        return packing.dequantize_groupwise(
+            q, self.scales, self.zeros, self.group,
+            dtype or self.out_dtype)
+
+    def __repr__(self):
+        return (f"QTensor(int{self.bits}, K={self.K}, N={self.N}, "
+                f"group={self.group})")
+
+
+def quantize_tensor(w, bits: int = 4, group: int = 128,
+                    act_scale=None) -> QTensor:
+    """Quantize a dense (K, N) weight. ``act_scale`` (K,) applies an
+    AWQ-style per-input-channel equalization before quantization; the
+    reciprocal is stored on the QTensor and folded into activations by
+    ``matmul`` (math: x @ W == (x/s) @ (s·W)).
+    """
+    K, N = w.shape
+    dtype = w.dtype
+    w = w.astype(jnp.float32)
+    inv_act = None
+    if act_scale is not None:
+        w = w * act_scale[:, None]
+        inv_act = (1.0 / act_scale).astype(jnp.float32)
+    g = min(group, K)
+    while K % g:
+        g //= 2
+    q, s, z = packing.quantize_groupwise(w, bits, g)
+    return QTensor(packing.pack(q, bits), s, z, bits=bits, group=g, K=K, N=N,
+                   out_dtype=dtype, inv_act=inv_act)
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, QTensor)
+
+
+def matmul(x, w, *, use_kernel: bool = False):
+    """``x @ w`` where ``w`` is a dense array or a QTensor.
+
+    ``use_kernel`` selects the Pallas wNa16 path (TPU target; validated in
+    interpret mode). The default jnp dequant path lowers to the identical
+    math and is what XLA sees in the CPU tests.
+    """
+    if not is_quantized(w):
+        return jnp.matmul(x, w.astype(x.dtype))
+    if w.inv_act is not None:
+        x = x * w.inv_act.astype(x.dtype)
+    if use_kernel and w.bits in (4, 8):
+        from repro.kernels import ops as kops
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = kops.wna16_matmul(x2, w)
+        return out.reshape(*lead, w.N)
+    wd = w.dequantize(x.dtype)
+    return jnp.matmul(x, wd)
+
+
+def weight_nbytes(w) -> int:
+    """Device bytes of a weight leaf (dense or quantized)."""
+    if is_quantized(w):
+        return w.nbytes
+    return w.size * w.dtype.itemsize

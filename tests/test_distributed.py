@@ -1,0 +1,141 @@
+"""Cluster control plane: dispatch, failure recovery, stragglers, elasticity.
+Plus sharding-rule unit tests and the dry-run collective parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ServingConfig, MORPH_LLAMA2_7B
+from repro.distributed.cluster import FaultEvent, ServingCluster
+from repro.distributed.sharding import (cache_spec, data_spec, path_str,
+                                        spec_for_param)
+from repro.engine import EngineConfig, NVIDIA_L4, azure_like
+
+
+def make_cluster(n=2, **kw):
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=16, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8), mode="performance")
+    ec = EngineConfig(policy="morph", compute="sim", hw=NVIDIA_L4,
+                      dtype="bfloat16", seed=0)
+    return ServingCluster(MORPH_LLAMA2_7B, None, sc, ec, n_replicas=n, **kw)
+
+
+def small_trace(n=30, dur=20.0, seed=0):
+    return azure_like(duration_s=dur, base_rps=n / dur / 2, seed=seed,
+                      prompt_mean=256, gen_mean=64, prompt_max=512,
+                      gen_max=128)
+
+
+def test_cluster_serves_and_balances():
+    cl = make_cluster(2)
+    rep = cl.run(small_trace(40), horizon_s=200.0)
+    assert rep.n_finished >= 0.9 * rep.n_requests
+    loads = [len(r.engine.all_requests) for r in cl.replicas]
+    assert min(loads) > 0, "dispatcher never used one replica"
+
+
+def test_cluster_recovers_from_kill():
+    cl = make_cluster(2, restart_delay_s=3.0, heartbeat_timeout_s=0.5)
+    faults = [FaultEvent(time_s=4.0, kind="kill", replica=0)]
+    rep = cl.run(small_trace(40, dur=30.0), faults, horizon_s=300.0)
+    assert cl.detected_failures == 1
+    assert cl.redispatched > 0, "in-flight work was not re-dispatched"
+    assert cl.replicas[0].alive, "replica never restarted"
+    # no silent loss: every trace request eventually produced a finished copy
+    assert rep.n_finished >= 0.85 * rep.n_requests
+
+
+def test_cluster_drains_straggler():
+    cl = make_cluster(3, straggler_factor=2.5)
+    faults = [FaultEvent(time_s=2.0, kind="slow", replica=1, factor=10.0)]
+    rep = cl.run(small_trace(60, dur=30.0), faults, horizon_s=300.0)
+    assert cl.drains >= 1, "straggler was never drained"
+
+
+def test_cluster_elastic_scale_out():
+    cl = make_cluster(1)
+    faults = [FaultEvent(time_s=3.0, kind="add", replica=-1)]
+    rep = cl.run(small_trace(50, dur=20.0), faults, horizon_s=300.0)
+    assert len(cl.replicas) == 2
+    assert len(cl.replicas[1].engine.all_requests) > 0, \
+        "new replica took no traffic"
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+AXES = {"data": 16, "model": 16}
+
+
+def test_spec_attention_weights():
+    assert spec_for_param("segments/0/0/attn/wq", (4096, 4096), AXES) \
+        == jax.sharding.PartitionSpec(None, "model")
+    assert spec_for_param("segments/0/0/attn/wo", (4096, 4096), AXES) \
+        == jax.sharding.PartitionSpec("model", None)
+
+
+def test_spec_divisibility_fallback():
+    # 25 heads * 64 = 1600: not divisible by 16 -> replicated
+    s = spec_for_param("segments/0/0/attn/wq", (1600, 1602), AXES)
+    assert s == jax.sharding.PartitionSpec(None, None)
+
+
+def test_spec_expert_ep_both_axes():
+    s = spec_for_param("segments/1/0/moe/w_gate", (256, 7168, 2048), AXES)
+    assert s[0] == ("data", "model")
+
+
+def test_spec_fsdp_adds_data_axis():
+    s = spec_for_param("segments/0/0/attn/wq", (4096, 4096), AXES, fsdp=True)
+    assert "data" in jax.tree.leaves(tuple(s)) or \
+        any("data" in (x if isinstance(x, tuple) else (x,))
+            for x in s if x)
+
+
+def test_spec_never_reuses_axis():
+    s = spec_for_param("segments/1/0/moe/w_down", (256, 2048, 7168), AXES,
+                       fsdp=True)
+    flat = []
+    for x in s:
+        flat.extend(x if isinstance(x, tuple) else [x])
+    used = [x for x in flat if x]
+    assert len(used) == len(set(used)), s
+
+
+def test_cache_spec_shards_seq_over_model():
+    s = cache_spec("segments/0/0/k", (16, 128, 32768, 16, 64), AXES)
+    assert s[1] == "data" and s[2] == "model"
+
+
+def test_cache_spec_batch1_replicated():
+    s = cache_spec("segments/0/0/k", (32, 1, 524288, 5, 64), AXES)
+    assert s[1] is None and s[2] == "model"
+
+
+def test_data_spec():
+    assert data_spec((256, 4096), AXES)[0] == "data"
+    assert data_spec((7, 4096), AXES)[0] is None
+
+
+def test_path_str_normalizes():
+    tree = {"a": [ {"b": jnp.zeros(2)} ]}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    assert path_str(flat[0][0]) == "a/0/b"
+
+
+# --------------------------------------------------------------------------
+# collective parser
+# --------------------------------------------------------------------------
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = f32[128,1024]{1,0} all-gather(f32[8,1024]{1,0} %x), dims={0}
+  %ar = bf16[512]{0} all-reduce(bf16[512]{0} %y), to_apply=%sum
+  (f32[64]{0}, f32[64]{0}) all-to-all(f32[64]{0} %a, f32[64]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 1024 * 4
+    assert out["all-reduce"] == 512 * 2
+    assert out["all-to-all"] == 2 * 64 * 4
+    assert out["count_all-gather"] == 1

@@ -1,0 +1,244 @@
+"""Serving engine behaviour: paged KV, scheduler, preemption, morphing loop,
+state preservation across swaps (DESIGN.md §7)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ServingConfig, reduced, MORPH_LLAMA2_7B, ASSIGNED
+from repro.core import tree_bytes
+from repro.engine import (EngineConfig, MorphServeEngine, TraceRequest,
+                          azure_like)
+from repro.engine.kv_cache import BlockAllocator, PagedKVPool, kv_block_bytes
+from repro.engine.request import RState
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(cfg, params, *, blocks=24, policy="morph", mode="performance",
+                slots=4, compute="real", seed=0):
+    wb = tree_bytes(params)
+    bb = kv_block_bytes(cfg, 16, 4)
+    budget = int((wb + blocks * bb) / 0.95) + 2 * bb
+    sc = ServingConfig(hbm_budget_bytes=budget, kv_block_size=16,
+                       max_batch_slots=slots, max_seq_len=256,
+                       swap_levels=(0, 1, 2, 4), mode=mode,
+                       kv_resize_step_frac=0.25)
+    return MorphServeEngine(cfg, params, sc,
+                            EngineConfig(policy=policy, compute=compute,
+                                         seed=seed))
+
+
+# --------------------------------------------------------------------------
+# block allocator
+# --------------------------------------------------------------------------
+def test_allocator_basics():
+    a = BlockAllocator(10)             # blocks 1..9
+    ids = a.alloc(4)
+    assert ids == [1, 2, 3, 4]
+    assert a.alloc(6) is None           # only 5 left
+    a.release(ids[:2])
+    assert a.n_free == 7
+    a.grow(14)
+    assert a.n_free == 11
+    assert a.num_blocks == 14
+
+
+def test_allocator_shrink_tail_only():
+    a = BlockAllocator(10)
+    ids = a.alloc(3)                    # 1,2,3 used
+    assert a.shrink(4)                  # tail 4..9 free -> ok
+    assert a.num_blocks == 4
+    assert not a.shrink(3)              # block 3 in use
+
+
+def test_pool_resize_grow_preserves_content():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    pool = PagedKVPool(cfg, 8, 4)
+    pool.k = pool.k.at[0, 3].set(1.5)
+    assert pool.resize(12)
+    assert pool.num_blocks == 12
+    assert float(pool.k[0, 3, 0, 0, 0]) == 1.5
+
+
+# --------------------------------------------------------------------------
+# end-to-end engine runs (real compute)
+# --------------------------------------------------------------------------
+def test_engine_serves_trace_real(model):
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=30)
+    trace = [TraceRequest(0.0, 20, 5), TraceRequest(0.01, 35, 6),
+             TraceRequest(0.02, 10, 4)]
+    rep = eng.run_trace(trace)
+    assert rep.n_finished == 3
+    fin = [r for r in eng.all_requests if r.state == RState.FINISHED]
+    for r in fin:
+        assert len(r.generated) == r.max_new_tokens
+        assert len(r.token_times) == r.max_new_tokens
+    # all blocks returned
+    assert eng.pool.alloc.n_used == 0
+
+
+def test_engine_preempts_under_block_exhaustion(model):
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=8, policy="static_fp16", slots=4)
+    # two long requests that cannot both hold blocks to completion
+    trace = [TraceRequest(0.0, 40, 40), TraceRequest(0.0, 40, 40)]
+    rep = eng.run_trace(trace, max_steps=4000)
+    assert rep.preemptions >= 1
+    assert rep.n_finished == 2          # recompute path completes them
+
+
+def test_engine_morphs_and_restores(model):
+    """Pressure -> swap level rises + pool grows; drain -> restores to 0."""
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=6, mode="performance")
+    trace = [TraceRequest(0.001 * i, 30, 32) for i in range(10)]
+    rep = eng.run_trace(trace, max_steps=6000)
+    levels = [t.swap_level for t in eng.monitor.history]
+    assert max(levels) > 0, "pressure never triggered a swap"
+    assert eng.actuator.level == 0 or levels[-1] <= max(levels)
+    blocks = [t.kv_total_blocks for t in eng.monitor.history]
+    assert max(blocks) > blocks[0], "KV pool never grew"
+    assert rep.n_finished == len(trace)
+    assert 0 < rep.degraded_token_frac < 1.0
+
+
+def test_state_preserving_swap(model):
+    """The paper's core state-preservation claim: a swap mid-decode does not
+    disturb block tables or positions, and after restore the engine produces
+    the same tokens as a never-swapped run (greedy, same seeds)."""
+    cfg, params = model
+    trace = [TraceRequest(0.0, 24, 8), TraceRequest(0.0, 18, 8)]
+    eng_fp = make_engine(cfg, params, blocks=30, policy="static_fp16", seed=7)
+    rep_fp = eng_fp.run_trace(trace)
+    toks_fp = [r.generated for r in eng_fp.all_requests]
+
+    eng_m = make_engine(cfg, params, blocks=30, policy="morph", seed=7)
+    # force a swap to level 2 then immediately restore before any decode
+    eng_m.actuator.issue(2, now=0.0)
+    eng_m.actuator.poll(now=1e9)
+    eng_m.actuator.issue(0, now=0.0)
+    eng_m.actuator.poll(now=1e9)
+    rep_m = eng_m.run_trace(trace)
+    toks_m = [r.generated for r in eng_m.all_requests]
+    assert toks_fp == toks_m, "swap->restore must be bit-transparent"
+
+
+def test_quantized_decode_token_overlap(model):
+    """Static int4 decode should mostly agree with fp16 on a trained-ish
+    model? On random weights agreement is weaker — just require the engine
+    runs and produces the right counts at full quantization."""
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=30, policy="static_int4")
+    trace = [TraceRequest(0.0, 16, 6)]
+    rep = eng.run_trace(trace)
+    assert rep.n_finished == 1
+    assert rep.degraded_token_frac == 1.0
+
+
+def test_scheduler_fifo_order(model):
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=30, slots=1)   # serialize
+    trace = [TraceRequest(0.0, 10, 3), TraceRequest(0.0, 10, 3),
+             TraceRequest(0.0, 10, 3)]
+    eng.run_trace(trace)
+    firsts = [r.first_token_s for r in eng.all_requests]
+    assert firsts == sorted(firsts)
+
+
+def test_ledger_invariant_throughout_run(model):
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=6, mode="performance")
+    trace = [TraceRequest(0.001 * i, 30, 24) for i in range(10)]
+    for tr in trace:
+        eng.submit(tr)
+    for _ in range(3000):
+        if not any(r.state in (RState.QUEUED, RState.RUNNING,
+                               RState.PREEMPTED)
+                   for r in eng.all_requests):
+            break
+        eng.step()
+        assert eng.ledger.ok(), "ledger invariant violated mid-run"
+        assert eng.pool.num_blocks - 1 >= eng.pool.alloc.n_used
+    assert eng.ledger.ok()
+
+
+# --------------------------------------------------------------------------
+# SSM serving (beyond-paper: elasticity for attention-free archs)
+# --------------------------------------------------------------------------
+def test_engine_serves_mamba(model):
+    cfg = reduced(ASSIGNED["mamba2-780m"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    eng = make_engine(cfg, params, blocks=16)
+    trace = [TraceRequest(0.0, 12, 4), TraceRequest(0.0, 20, 4)]
+    rep = eng.run_trace(trace, max_steps=2000)
+    assert rep.n_finished == 2
+
+
+def test_engine_serves_hybrid():
+    cfg = reduced(ASSIGNED["hymba-1.5b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    wb = tree_bytes(params)
+    bb = kv_block_bytes(cfg, 16, 4)
+    sc = ServingConfig(hbm_budget_bytes=int((wb + 24 * bb) / 0.95) + 2 * bb,
+                       kv_block_size=16, max_batch_slots=4, max_seq_len=128,
+                       swap_levels=(0, 1, 2), mode="performance")
+    eng = MorphServeEngine(cfg, params, sc,
+                           EngineConfig(policy="morph", compute="real"))
+    trace = [TraceRequest(0.0, 12, 4)]
+    rep = eng.run_trace(trace, max_steps=1000)
+    assert rep.n_finished == 1
+
+
+def test_engine_paged_decode_matches_dense(model):
+    """Engine's paged decode must equal the dense-cache decode path."""
+    cfg, params = model
+    from repro.models.registry import get_model
+    api = get_model(cfg)
+    prompt = list(np.random.default_rng(0).integers(0, cfg.vocab, 12))
+    # dense-cache greedy continuation
+    cache = api.init_cache(cfg, 1, 64)
+    toks = jnp.array([prompt])
+    full = lm.forward(cfg, params, toks, moe_cf=-1.0)
+    nxt = int(jnp.argmax(full[0, -1]))
+    dense_out = [nxt]
+    for t in range(len(prompt)):
+        _, cache = api.decode_step(cfg, params, cache, toks[:, t:t+1])
+    for _ in range(4):
+        logits, cache = api.decode_step(cfg, params, cache,
+                                        jnp.array([[dense_out[-1]]]))
+        dense_out.append(int(jnp.argmax(logits[0, 0])))
+    # engine run with the same prompt
+    eng = make_engine(cfg, params, blocks=30, policy="static_fp16")
+    r = eng.submit(TraceRequest(0.0, len(prompt), 5))
+    r.prompt = prompt
+    while r.state != RState.FINISHED:
+        eng.step()
+    assert r.generated == dense_out, (r.generated, dense_out)
+
+
+def test_block_accounting_invariant(model):
+    """Allocator usage == sum of blocks held by requests at every step
+    (regression test for the stale-running-list preemption leak)."""
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=8, mode="performance")
+    trace = [TraceRequest(0.001 * i, 30, 24) for i in range(10)]
+    for tr in trace:
+        eng.submit(tr)
+    for _ in range(3000):
+        if not any(r.state in (RState.QUEUED, RState.RUNNING,
+                               RState.PREEMPTED) for r in eng.all_requests):
+            break
+        eng.step()
+        held = sum(len(r.block_ids) for r in eng.all_requests)
+        assert held == eng.pool.alloc.n_used, (held, eng.pool.alloc.n_used)
+    assert eng.pool.alloc.n_used == 0

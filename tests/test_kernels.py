@@ -1,0 +1,113 @@
+"""Pallas kernel validation vs pure-jnp oracles (interpret mode).
+
+Per the assignment: shape/dtype sweeps with assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.kernels import ops, ref
+from repro.kernels.wna16_gemm import wna16_gemm
+from repro.quant import quantize_tensor
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("M,K,N,G", [
+    (1, 256, 128, 64),        # decode (tiny M)
+    (8, 256, 128, 128),
+    (33, 512, 256, 128),      # M not multiple of block
+    (128, 1024, 512, 128),
+    (16, 128, 384, 32),       # small K = single k-block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wna16_gemm_sweep(bits, M, K, N, G, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M * K + bits))
+    x = jax.random.normal(k1, (M, K), dtype=jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (K, N)) * 0.05
+    qt = quantize_tensor(w, bits=bits, group=G)
+    out = ops.wna16_matmul(x.astype(jnp.float32), qt)
+    want = ref.wna16_gemm_ref(x.astype(jnp.float32), qt.packed, qt.scales,
+                              qt.zeros, bits=bits, group=qt.group, K=K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 512), (128, 128, 128)])
+def test_wna16_gemm_block_shapes(blocks):
+    bm, bn, bk = blocks
+    M, K, N, G = 64, 1024, 256, 128
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N)) * 0.05
+    qt = quantize_tensor(w, bits=4, group=G)
+    out = wna16_gemm(x, qt.packed, qt.scales, qt.zeros, bits=4, group=G,
+                     bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.wna16_gemm_ref(x, qt.packed, qt.scales, qt.zeros, bits=4,
+                              group=G, K=K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KVH,Dh,nblocks,bs,maxnb", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (3, 4, 4, 32, 8, 8, 3),
+    (1, 16, 1, 128, 32, 16, 8),   # MQA, long table
+    (4, 4, 2, 64, 8, 32, 2),
+])
+def test_paged_attention_sweep(B, H, KVH, Dh, nblocks, bs, maxnb):
+    ks = jax.random.split(jax.random.PRNGKey(B * H + Dh), 5)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KVH, Dh))
+    tables = jax.random.randint(ks[3], (B, maxnb), 0, nblocks)
+    lens = jax.random.randint(ks[4], (B,), 1, maxnb * bs + 1)
+    out = ops.paged_attention(q, kp, vp, tables, lens)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(seed=hst.integers(0, 2**16), bs=hst.sampled_from([8, 16]),
+       maxnb=hst.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_paged_attention_table_permutation_invariance(seed, bs, maxnb):
+    """Property: physical block placement must not matter — permuting the
+    pool and remapping tables gives identical output (KVResizer invariant)."""
+    rng = np.random.default_rng(seed)
+    B, H, KVH, Dh, nblocks = 2, 4, 2, 32, 12
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KVH, Dh))
+    tables = rng.integers(0, nblocks, size=(B, maxnb)).astype(np.int32)
+    lens = rng.integers(1, maxnb * bs + 1, size=(B,)).astype(np.int32)
+    out1 = ref.paged_attention_ref(q, kp, vp, jnp.array(tables),
+                                   jnp.array(lens))
+    perm = rng.permutation(nblocks)
+    inv = np.argsort(perm)
+    out2 = ref.paged_attention_ref(q, kp[inv], vp[inv],
+                                   jnp.array(perm[tables]), jnp.array(lens))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_matches_dense_attention():
+    """Paged oracle == dense causal attention when the table is contiguous."""
+    from repro.models.layers import naive_attention
+    B, H, KVH, Dh, bs, maxnb = 2, 8, 4, 32, 16, 4
+    T = bs * maxnb
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    k = jax.random.normal(ks[0], (B, T, KVH, Dh))
+    v = jax.random.normal(ks[1], (B, T, KVH, Dh))
+    q = jax.random.normal(ks[2], (B, 1, H, Dh))
+    lens = jnp.array([T, T // 2], jnp.int32)
+    # pack into pool: block b of seq s at pool id s*maxnb+b
+    kp = k.reshape(B * maxnb, bs, KVH, Dh)
+    vp = v.reshape(B * maxnb, bs, KVH, Dh)
+    tables = jnp.arange(B * maxnb, dtype=jnp.int32).reshape(B, maxnb)
+    out_p = ops.paged_attention(q[:, 0], kp, vp, tables, lens)
+    out_d = naive_attention(q, k, v, causal=False, kv_len=lens)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d[:, 0]),
+                               rtol=2e-5, atol=2e-5)
