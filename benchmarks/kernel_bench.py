@@ -1,25 +1,36 @@
-"""Kernel microbenchmarks: wNa16 GEMM + paged attention.
+"""Kernel microbenchmarks: wNa16 GEMM + paged attention + decode step.
 
 Wall-time on this CPU container measures the *jnp dequant path* (what XLA
 executes here); the Pallas kernels are interpret-mode-validated and their
 TPU benefit is reported via the roofline byte model (weights traffic 4x/2x
-lower)."""
+lower).
+
+The decode-step benchmark measures the engine's fused decode attention op
+(``ops.paged_decode_attention``) at a fixed ``max_nb`` with the block table
+truncated to the live power-of-two bucket — the HBM-traffic lever this data
+plane is built around. Results land in ``BENCH_decode.json`` so the perf
+trajectory is machine-readable across PRs."""
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.kernels import ref
+from repro.engine.model_exec import pad_bucket
+from repro.kernels import ops, ref
 from repro.quant import qlinear, quantize_tensor
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
-    K, N = 2048, 2048
+    K, N = (512, 512) if smoke else (2048, 2048)
     w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
-    for M in (1, 16, 128):
+    for M in ((1, 16) if smoke else (1, 16, 128)):
         x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
         dense = jax.jit(lambda x, w: x @ w)
         us_dense = timeit(lambda: jax.block_until_ready(dense(x, w)))
@@ -31,8 +42,9 @@ def run():
             rows.append((f"wna16_M{M}_int{bits}", us_q,
                          f"dense_us={us_dense:.0f};hbm_bytes_ratio="
                          f"{hbm_ratio:.3f}"))
-    # paged attention (jnp reference path = engine decode path)
-    B, H, KVH, Dh, nb, bs, maxnb = 8, 32, 8, 128, 256, 16, 64
+    # paged attention (jnp reference path)
+    B, H, KVH, Dh, nb, bs = 8, 32, 8, 128, 256, 16
+    maxnb = 16 if smoke else 64
     ks = jax.random.split(jax.random.PRNGKey(2), 5)
     q = jax.random.normal(ks[0], (B, H, Dh))
     kp = jax.random.normal(ks[1], (nb, bs, KVH, Dh))
@@ -46,10 +58,76 @@ def run():
     return rows
 
 
+def decode_bench(smoke: bool = False):
+    """Per-step decode attention at fixed max_nb: full-table gather (seed
+    path) vs the live power-of-two bucket, for short and long live contexts.
+
+    Emits BENCH_decode.json: {name, us_per_call, nb_table, live_ctx} rows +
+    the short-context speedup (full / bucketed)."""
+    B, H, KVH, Dh, nb_pool, bs = 8, 32, 8, 128, 560, 16
+    maxnb = 16 if smoke else 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nb_pool, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nb_pool, bs, KVH, Dh))
+    kn = jax.random.normal(ks[3], (B, KVH, Dh))
+    vn = jax.random.normal(ks[4], (B, KVH, Dh))
+    # globally distinct live tables (engine block-ownership contract)
+    tables = jnp.array(
+        1 + np.random.default_rng(0).permutation(B * maxnb).reshape(B, maxnb),
+        jnp.int32)
+
+    def step_us(nb_t, pos):
+        fn = jax.jit(lambda q, kn, vn, kp, vp, t, p:
+                     ops.paged_decode_attention(q, kn, vn, kp, vp, t, p))
+        t = tables[:, :nb_t]
+        return timeit(lambda: jax.block_until_ready(
+            fn(q, kn, vn, kp, vp, t, pos)))
+
+    results = []
+    scenarios = [("short_ctx", 2 * bs - 1), ("long_ctx", maxnb * bs - 1)]
+    speedups = {}
+    for name, ctx in scenarios:
+        pos = jnp.full((B,), ctx, jnp.int32)
+        live_nb = ctx // bs + 1
+        nb_bucket = min(pad_bucket(live_nb, 1), maxnb)
+        us_full = step_us(maxnb, pos)
+        us_bucket = step_us(nb_bucket, pos)
+        speedups[name] = us_full / us_bucket
+        results.append({"name": f"decode_{name}_full", "us_per_call": us_full,
+                        "nb_table": maxnb, "live_ctx": ctx})
+        results.append({"name": f"decode_{name}_bucketed",
+                        "us_per_call": us_bucket, "nb_table": nb_bucket,
+                        "live_ctx": ctx})
+    payload = {
+        "config": {"B": B, "H": H, "KVH": KVH, "Dh": Dh, "block_size": bs,
+                   "max_nb": maxnb, "backend": jax.default_backend(),
+                   "smoke": smoke},
+        "results": results,
+        "speedup_short_ctx": speedups["short_ctx"],
+        "speedup_long_ctx": speedups["long_ctx"],
+    }
+    out = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    # tolerate foreign argv when invoked via benchmarks/run.py
+    args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
-    for name, us, derived in run():
+    for name, us, derived in run(smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}")
+    payload = decode_bench(smoke=args.smoke)
+    for r in payload["results"]:
+        print(f"{r['name']},{r['us_per_call']:.1f},"
+              f"nb_table={r['nb_table']};live_ctx={r['live_ctx']}")
+    print(f"decode short-ctx speedup (bucketed vs full table): "
+          f"{payload['speedup_short_ctx']:.2f}x")
 
 
 if __name__ == "__main__":

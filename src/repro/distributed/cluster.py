@@ -145,12 +145,14 @@ class ServingCluster:
                     self.redispatched += 1
                     self.dispatch(TraceRequest(r.arrival_s, r.prompt_len, rem))
                 r.state = RState.FINISHED         # closed on dead replica
+                e._n_live -= 1
 
     def _redispatch_queued(self, i: int) -> None:
         e = self.replicas[i].engine
         for r in list(e.queue):
             e.queue.remove(r)
             r.state = RState.FINISHED
+            e._n_live -= 1
             self.redispatched += 1
             self.dispatch(TraceRequest(r.arrival_s, r.prompt_len,
                                        r.max_new_tokens))

@@ -14,8 +14,9 @@ Policies: ``morph`` (the paper's system), ``static_fp16`` and ``static_int4``
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
@@ -42,6 +43,14 @@ class EngineConfig:
     max_prefills_per_step: int = 2
     dtype: str = "float32"
     seed: int = 0
+    # decode block tables are truncated to the power-of-two bucket of the
+    # live max blocks across slots, so per-step gather cost follows the live
+    # context (bounded recompile set). Disable to force full-max_nb tables.
+    decode_nb_bucketing: bool = True
+    # admit up to max_prefills_per_step requests into one jitted prefill at a
+    # shared bucketed length (attention/MLA families; SSM state is
+    # position-exact and keeps the per-request path).
+    batch_prefill: bool = True
 
 
 class MorphServeEngine:
@@ -136,9 +145,10 @@ class MorphServeEngine:
         self.cost = CostModel(cfg, ecfg.hw, block_size=bs)
 
         # --- request state ----------------------------------------------------
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.all_requests: List[Request] = []
         self._next_rid = 0
+        self._n_live = 0          # requests in QUEUED/RUNNING/PREEMPTED
         self.rejected = 0
         self.resize_log: List = []
 
@@ -160,6 +170,7 @@ class MorphServeEngine:
             self.rejected += 1
             return r
         self.queue.append(r)
+        self._n_live += 1
         return r
 
     def _free_slot(self) -> Optional[int]:
@@ -174,11 +185,10 @@ class MorphServeEngine:
 
     # ------------------------------------------------------------------
     def _try_prefill(self) -> float:
-        """Admit up to max_prefills_per_step queued requests. Returns the
-        modeled time spent on prefills."""
-        spent = 0.0
-        admitted = 0
-        while self.queue and admitted < self.ec.max_prefills_per_step:
+        """Admit up to max_prefills_per_step queued requests — one batched
+        jitted call when possible. Returns the modeled time spent."""
+        admitted: List[Request] = []
+        while self.queue and len(admitted) < self.ec.max_prefills_per_step:
             r = self.queue[0]
             if r.arrival_s > self.now:
                 break
@@ -189,13 +199,19 @@ class MorphServeEngine:
             ids = self.pool.alloc.alloc(nb)
             if ids is None:
                 break                                   # memory pressure
-            self.queue.pop(0)
+            self.queue.popleft()
             r.slot, r.block_ids, r.state = slot, ids, RState.RUNNING
             self._slot_req[slot] = r
-            if self.ec.compute == "real":
-                first = self._prefill_real(r)
-            else:
-                first = int(self.rng.integers(0, self.cfg.vocab))
+            admitted.append(r)
+        if not admitted:
+            return 0.0
+        if self.ec.compute == "real":
+            firsts = self._prefill_real_many(admitted)
+        else:
+            firsts = [int(self.rng.integers(0, self.cfg.vocab))
+                      for _ in admitted]
+        spent = 0.0
+        for r, first in zip(admitted, firsts):
             spent += self.cost.prefill_time(r.prompt_len)
             # prefill emits the first token
             tok_time = self.now + spent
@@ -204,8 +220,32 @@ class MorphServeEngine:
             r.token_levels.append(self.actuator.level)
             r.generated.append(first)
             self.monitor.record_ttft(tok_time - r.arrival_s)
-            admitted += 1
         return spent
+
+    def _prefill_real_many(self, admitted: List[Request]) -> List[int]:
+        """Prefill admitted requests: one batched jitted call at a shared
+        bucketed length for attention/MLA families; SSM/hybrid state is
+        position-exact, so those fall back to the per-request path."""
+        if (not self.ec.batch_prefill or len(admitted) == 1
+                or self.cfg.family in ("ssm", "hybrid")):
+            return [self._prefill_real(r) for r in admitted]
+        bs = self.pool.block_size
+        P = self.ec.max_prefills_per_step      # fixed batch dim (one trace)
+        Sp = model_exec.pad_bucket(max(r.prompt_len for r in admitted), bs)
+        nb_p = Sp // bs
+        toks = np.zeros((P, Sp), np.int32)
+        tables = np.zeros((P, nb_p), np.int32)
+        lens = np.ones((P,), np.int32)
+        for i, r in enumerate(admitted):
+            toks[i, :r.prompt_len] = r.prompt
+            ids = r.block_ids[:nb_p]
+            tables[i, :len(ids)] = ids
+            lens[i] = r.prompt_len
+        last, self.pool.k, self.pool.v = self.exec.prefill_batch(
+            self.actuator.layer_list(), jnp.array(toks),
+            self.pool.k, self.pool.v, jnp.array(tables), jnp.array(lens))
+        toks_out = np.asarray(jnp.argmax(last, axis=-1))
+        return [int(toks_out[i]) for i in range(len(admitted))]
 
     def _prefill_real(self, r: Request) -> int:
         bs = self.pool.block_size
@@ -256,7 +296,7 @@ class MorphServeEngine:
         r.prompt = r.prompt + r.generated
         r.max_new_tokens -= len(r.generated)
         r.generated = []
-        self.queue.insert(0, r)
+        self.queue.appendleft(r)
 
     def _decode_once(self) -> float:
         run = self.running
@@ -285,13 +325,22 @@ class MorphServeEngine:
 
     def _decode_real(self, run: List[Request]) -> None:
         bs = self.pool.block_size
+        # truncate block tables to the power-of-two bucket of the live max:
+        # gather cost tracks the live context, recompiles stay bounded
+        # (log2(max_nb) table widths).
+        nb_t = self.max_nb
+        if self.ec.decode_nb_bucketing:
+            live_nb = max((len(r.block_ids) for r in run), default=1)
+            nb_t = min(model_exec.pad_bucket(max(live_nb, 1), 1), self.max_nb)
         tokens = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros((self.slots,), np.int32)
-        tables = np.zeros((self.slots, self.max_nb), np.int32)
+        tables = np.zeros((self.slots, nb_t), np.int32)
         for r in run:
             tokens[r.slot, 0] = r.generated[-1]
-            pos[r.slot] = r.context_len
-            ids = r.block_ids[:self.max_nb]
+            # generated[-1] is already counted in context_len, so its
+            # absolute index (RoPE position + KV append slot) is one less.
+            pos[r.slot] = r.context_len - 1
+            ids = r.block_ids[:nb_t]
             tables[r.slot, :len(ids)] = ids
         logits, self.pool.k, self.pool.v, self.ssm_conv, self.ssm_ssm = \
             self.exec.decode(self.actuator.layer_list(), jnp.array(tokens),
@@ -303,6 +352,7 @@ class MorphServeEngine:
 
     def _finish(self, r: Request, t: float) -> None:
         r.state = RState.FINISHED
+        self._n_live -= 1
         r.finish_s = t
         self.pool.alloc.release(r.block_ids)
         r.block_ids = []
@@ -380,16 +430,15 @@ class MorphServeEngine:
                   max_steps: int = 200000) -> ServingReport:
         for tr in trace:
             self.submit(tr)
-        self.queue.sort(key=lambda r: r.arrival_s)
+        self.queue = collections.deque(
+            sorted(self.queue, key=lambda r: r.arrival_s))
         end = horizon_s if horizon_s is not None else \
             (max(tr.arrival_s for tr in trace) + 1e9)
         steps = 0
         while steps < max_steps:
             steps += 1
-            pending = [r for r in self.all_requests
-                       if r.state in (RState.QUEUED, RState.PREEMPTED,
-                                      RState.RUNNING)]
-            if not pending:
+            # O(1) liveness check (was a per-step scan of all_requests)
+            if self._n_live == 0:
                 break
             if self.now > end:
                 break

@@ -16,6 +16,7 @@ elasticity adapted to attention-free models (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -38,10 +39,15 @@ def kv_block_bytes(cfg: ModelConfig, block_size: int,
 
 
 class BlockAllocator:
+    """Lowest-id-first allocator over a heapq free list.
+
+    O(log n) alloc/release (was: full re-sort on every release), so the host
+    scheduler stays linear in blocks touched per step."""
+
     def __init__(self, num_blocks: int):
-        # block 0 reserved as scratch
+        # block 0 reserved as scratch; ascending list is already a valid heap
         self.num_blocks = num_blocks
-        self.free: List[int] = list(range(num_blocks - 1, 0, -1))  # pop -> low id
+        self.free: List[int] = list(range(1, num_blocks))
 
     @property
     def n_free(self) -> int:
@@ -54,30 +60,39 @@ class BlockAllocator:
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self.free):
             return None
-        return [self.free.pop() for _ in range(n)]
+        return [heapq.heappop(self.free) for _ in range(n)]
 
     def release(self, ids: List[int]) -> None:
         for b in ids:
             assert 0 < b < self.num_blocks
-            self.free.append(b)
-        self.free.sort(reverse=True)
+            heapq.heappush(self.free, b)
 
     def grow(self, new_num_blocks: int) -> None:
         assert new_num_blocks >= self.num_blocks
-        fresh = list(range(new_num_blocks - 1, self.num_blocks - 1, -1))
-        self.free = fresh + self.free
-        self.free.sort(reverse=True)
+        # fresh ids exceed every id already in the heap, so appending them
+        # preserves the heap invariant (parents are all smaller).
+        self.free.extend(range(self.num_blocks, new_num_blocks))
         self.num_blocks = new_num_blocks
 
     def shrinkable_to(self) -> int:
-        """Smallest pool size droppable right now (free tail only)."""
-        used = set(range(1, self.num_blocks)) - set(self.free)
-        return (max(used) + 1) if used else 1
+        """Smallest pool size droppable right now (free tail only).
+
+        Builds a set of the free list (O(len(free))) and walks down from the
+        top id while it is free — computed from the free structure alone
+        (no set(range(num_blocks)) materialization as before)."""
+        if self.n_used == 0:
+            return 1
+        free_set = set(self.free)
+        b = self.num_blocks - 1
+        while b in free_set:
+            b -= 1
+        return b + 1
 
     def shrink(self, new_num_blocks: int) -> bool:
         if new_num_blocks < self.shrinkable_to():
             return False
         self.free = [b for b in self.free if b < new_num_blocks]
+        heapq.heapify(self.free)
         self.num_blocks = new_num_blocks
         return True
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models import lm
 from repro.models import mamba as M
@@ -53,17 +54,21 @@ def _gather_kv(pool, li, tables):
 
 def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, *,
                       window: int = 0):
-    """x: (slots, 1, D); pos: (slots,) absolute position of the new token."""
+    """x: (slots, 1, D); pos: (slots,) absolute position of the new token.
+
+    The attention read goes through ``kernels/ops.paged_decode_attention``
+    (Pallas block-walk on TPU; bucketed jnp gather elsewhere) — cost follows
+    the caller-truncated width of ``tables``, not max_blocks_per_seq.
+    """
     slots = x.shape[0]
     bs = pool_k.shape[2]
     q, k, v = L.gqa_project_qkv(p, cfg, x, pos[:, None])
     blk_idx = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
     pool_k, pool_v = _append_kv(pool_k, pool_v, li, k[:, 0], v[:, 0],
                                 blk_idx, pos % bs)
-    gk = _gather_kv(pool_k, li, tables)
-    gv = _gather_kv(pool_v, li, tables)
-    out = L.naive_attention(q, gk, gv, causal=True, q_offset=pos,
-                            window=window, softcap=cfg.logit_softcap)
+    out = ops.paged_decode_attention(
+        q[:, 0], k[:, 0], v[:, 0], pool_k[li], pool_v[li], tables, pos,
+        window=window, softcap=cfg.logit_softcap)
     y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"])
     if cfg.attn_out_bias:
         y = y + p["bo"]
@@ -109,7 +114,9 @@ def _paged_mla_decode(p, cfg, x, pool_k, li, tables, pos):
 # ---------------------------------------------------------------------------
 def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
                       pos, pool_k, pool_v, tables, ssm_conv, ssm_ssm):
-    """tokens: (slots, 1); pos: (slots,) context length (= new token index).
+    """tokens: (slots, 1); pos: (slots,) absolute index of the token being
+    decoded (= context length *before* it, i.e. context_len - 1 once the
+    token is counted in generated). RoPE position and KV append slot.
     Returns (logits (slots, V), pool_k, pool_v, ssm_conv, ssm_ssm)."""
     x = jnp.take(misc["embed"], tokens, axis=0)
     ssm_li = 0
@@ -195,6 +202,36 @@ def paged_prefill(cfg: ModelConfig, kinds, misc, layer_params, tokens,
     return logits[0], pool_k, pool_v, ssm_conv, ssm_ssm
 
 
+def paged_prefill_batch(cfg: ModelConfig, kinds, misc, layer_params, tokens,
+                        pool_k, pool_v, tables, lens):
+    """Prefill up to P requests in ONE jitted call at a shared padded length.
+
+    tokens: (P, Sp) with Sp = tables.shape[1] * block_size (a shared bucket);
+    tables: (P, nb) physical block ids, scratch 0 where padded; lens: (P,)
+    true prompt lengths. Rows are independent (causal masking + dropless MoE),
+    so batching is bit-transparent per row. Attention/MLA families only —
+    SSM/hybrid state is position-exact and keeps the per-request path.
+
+    Returns (last-token logits (P, V), pool_k, pool_v)."""
+    layer_list = list(zip(kinds, layer_params))
+    logits, payloads = lm.prefill_collect(cfg, misc, layer_list, tokens)
+    bs = pool_k.shape[2]
+    P, Sp = tokens.shape
+    nb = tables.shape[1]
+    for i, payload in enumerate(payloads):
+        if "k" in payload and nb > 0:
+            k = payload["k"].reshape(P, nb, bs, *payload["k"].shape[2:])
+            v = payload["v"].reshape(P, nb, bs, *payload["v"].shape[2:])
+            pool_k = pool_k.at[i, tables].set(k.astype(pool_k.dtype))
+            pool_v = pool_v.at[i, tables].set(v.astype(pool_v.dtype))
+        elif "latent" in payload and nb > 0:
+            lat = payload["latent"].reshape(
+                P, nb, bs, *payload["latent"].shape[2:])[:, :, :, None, :]
+            pool_k = pool_k.at[i, tables].set(lat.astype(pool_k.dtype))
+    last = logits[jnp.arange(P), lens - 1]
+    return last, pool_k, pool_v
+
+
 class ModelExec:
     """Owns the jit caches for prefill/decode at each (level, pool, bucket).
 
@@ -213,6 +250,9 @@ class ModelExec:
         self._prefill_jit = jax.jit(
             functools.partial(paged_prefill, cfg, self.kinds),
             donate_argnums=(3, 4, 6, 7))
+        self._prefill_batch_jit = jax.jit(
+            functools.partial(paged_prefill_batch, cfg, self.kinds),
+            donate_argnums=(3, 4))
 
     def decode(self, layer_list, tokens, pos, pool_k, pool_v, tables,
                ssm_conv, ssm_ssm):
@@ -226,3 +266,8 @@ class ModelExec:
         return self._prefill_jit(self.misc, lp, tokens,
                                  pool_k, pool_v, block_ids, ssm_conv,
                                  ssm_ssm, slot)
+
+    def prefill_batch(self, layer_list, tokens, pool_k, pool_v, tables, lens):
+        lp = tuple(p for _, p in layer_list)
+        return self._prefill_batch_jit(self.misc, lp, tokens,
+                                       pool_k, pool_v, tables, lens)

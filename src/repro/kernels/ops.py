@@ -3,12 +3,18 @@
 ``interpret`` defaults to True off-TPU (CPU container executes the kernel
 bodies in Python for correctness); on a real TPU backend the same call sites
 compile to Mosaic.
+
+``paged_decode_attention`` is the engine's decode attention hot path: on TPU
+it is the fused Pallas kernel (block walk + fused single-token append);
+elsewhere it lowers to a bucketed jnp gather whose cost follows the caller's
+block-table width (the engine truncates tables to the live power-of-two
+bucket) instead of ``max_blocks_per_seq``.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels import paged_attention as pa
 from repro.kernels.wna16_gemm import wna16_gemm as _gemm
 
 
@@ -23,6 +29,26 @@ def wna16_matmul(x2, qt):
                  group=qt.group, interpret=_interpret())
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, context_lens):
-    return _paged(q, k_pool, v_pool, block_tables, context_lens,
-                  interpret=_interpret())
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+                    window: int = 0, softcap: float = 0.0):
+    return pa.paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                              window=window, softcap=softcap,
+                              interpret=_interpret())
+
+
+def paged_decode_attention(q, k_new, v_new, k_pool, v_pool, block_tables,
+                           pos, *, window: int = 0, softcap: float = 0.0):
+    """Decode attention over pool KV + the current token (B, KVH, Dh).
+
+    Contract: the caller has already scattered (k_new, v_new) into the pool
+    at position ``pos[b]`` (the scatter and this read are independent — the
+    TPU kernel only reads positions < pos and takes the new token as a VMEM
+    operand). ``block_tables`` may be truncated to any width covering
+    ``pos // block_size``; cost scales with that width on the jnp path.
+    """
+    if jax.default_backend() == "tpu":
+        return pa.paged_attention_fused(q, k_new, v_new, k_pool, v_pool,
+                                        block_tables, pos, window=window,
+                                        softcap=softcap, interpret=False)
+    return pa.paged_gather_attention(q, k_pool, v_pool, block_tables, pos,
+                                     window=window, softcap=softcap)

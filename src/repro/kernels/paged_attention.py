@@ -11,6 +11,19 @@ elastic pool relies on.
 Grid: (batch, kv_heads, max_blocks_per_seq), innermost = block walk with an
 online-softmax accumulator in VMEM scratch. GQA: the G = H/KVH query heads of
 a kv head are processed together as the (G, Dh) q block.
+
+Feature parity with ``layers.naive_attention`` for the decode case:
+sliding-window masking (``window``), logit softcapping (``softcap``), and a
+**fused single-token append** — the current step's (k_new, v_new) enter the
+online softmax as VMEM operands at the finish step, so attention never
+re-reads the just-appended token from the HBM pool and the pool scatter can
+be scheduled independently of the block walk.
+
+``paged_decode_attention`` is the engine-facing fused op: one call appends
+the token to the pool and returns the attention output. On TPU it runs the
+Pallas kernel; elsewhere it lowers to a jnp gather whose cost tracks the
+*caller-truncated* block-table width (the engine buckets tables to the
+power-of-two of the live max, so decode HBM traffic follows live context).
 """
 from __future__ import annotations
 
@@ -22,9 +35,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                       m_scr, l_scr, acc_scr, *, block_size: int,
-                       max_nb: int, scale: float):
+def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref,
+                       kn_ref, vn_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                       block_size: int, max_nb: int, scale: float,
+                       window: int, softcap: float, fused_new: bool):
     b = pl.program_id(0)
     nb = pl.program_id(2)
 
@@ -34,9 +48,16 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    ctx_len = lens_ref[b]
+    ctx_len = lens_ref[b]            # pool tokens (excludes the fused new one)
+    # query position: the fused new token sits *at* ctx_len; otherwise the
+    # newest pool token (decode semantics) anchors the sliding window.
+    qpos = ctx_len if fused_new else ctx_len - 1
     base = nb * block_size
-    valid = base < ctx_len                      # any position in this block?
+    valid = base < ctx_len
+    if window > 0:
+        # the block can be skipped entirely when even its last position
+        # (base + bs - 1) falls outside the window (kpos > qpos - window).
+        valid &= (base + block_size - 1) > (qpos - window)
 
     @pl.when(valid)
     def _step():
@@ -44,8 +65,13 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
         v = v_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
         pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-        s = jnp.where(pos < ctx_len, s, -1e30)  # (G, bs)
+        msk = pos < ctx_len                      # (1, bs)
+        if window > 0:
+            msk &= pos > (qpos - window)
+        s = jnp.where(msk, s, -1e30)             # (G, bs)
         m_prev = m_scr[...]                      # (G, 1)
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -57,29 +83,38 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(nb == max_nb - 1)
     def _finish():
+        if fused_new:
+            # fold the current token in (always visible: kpos == qpos).
+            q = q_ref[0, 0].astype(jnp.float32)       # (G, Dh)
+            kn = kn_ref[0, 0].astype(jnp.float32)     # (1, Dh)
+            vn = vn_ref[0, 0].astype(jnp.float32)     # (1, Dh)
+            s = jnp.dot(q, kn.T, preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap   # (G, 1)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, s)
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * corr + p
+            m_scr[...] = m_new
+            acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+                p, vn, preferred_element_type=jnp.float32)
         o_ref[0, 0] = (acc_scr[...] /
                        jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
-                    interpret: bool = True):
-    """q: (B, H, Dh); pools: (num_blocks, bs, KVH, Dh);
-    block_tables: (B, max_nb) int32; context_lens: (B,) int32 → (B, H, Dh).
-
-    Unused table entries may hold any valid block id (masked by length).
-    """
-    B, H, Dh = q.shape
-    num_blocks, bs, KVH, _ = k_pool.shape
-    G = H // KVH
+def _paged_call(qg, k_pool, v_pool, k_new, v_new, block_tables, context_lens,
+                *, window, softcap, fused_new, interpret):
+    B, KVH, G, Dh = qg.shape
+    num_blocks, bs = k_pool.shape[:2]
     max_nb = block_tables.shape[1]
-    qg = q.reshape(B, KVH, G, Dh)
     scale = Dh ** -0.5
 
     grid = (B, KVH, max_nb)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_paged_attn_kernel, block_size=bs, max_nb=max_nb,
-                          scale=scale),
+                          scale=scale, window=window, softcap=softcap,
+                          fused_new=fused_new),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
@@ -92,6 +127,10 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
                 pl.BlockSpec((1, bs, 1, Dh),
                              lambda b, h, nb, tables, lens:
                              (tables[b, nb], 0, h, 0)),
+                pl.BlockSpec((1, 1, 1, Dh),
+                             lambda b, h, nb, tables, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, 1, Dh),
+                             lambda b, h, nb, tables, lens: (b, h, 0, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1, G, Dh),
                                    lambda b, h, nb, tables, lens: (b, h, 0, 0)),
@@ -101,7 +140,78 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
                 pltpu.VMEM((G, Dh), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, Dh), qg.dtype),
         interpret=interpret,
-    )(block_tables, context_lens, qg, k_pool, v_pool)
+    )(block_tables, context_lens, qg, k_pool, v_pool, k_new, v_new)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+                    window: int = 0, softcap: float = 0.0,
+                    interpret: bool = True):
+    """q: (B, H, Dh); pools: (num_blocks, bs, KVH, Dh);
+    block_tables: (B, max_nb) int32; context_lens: (B,) int32 → (B, H, Dh).
+
+    All ``context_lens[b]`` tokens live in the pool; the query is the token at
+    position ``context_lens[b] - 1`` (decode). ``window`` > 0 applies sliding-
+    window masking anchored at that position; ``softcap`` > 0 tanh-caps the
+    logits. Unused table entries may hold any valid block id (length-masked).
+    """
+    B, H, Dh = q.shape
+    KVH = k_pool.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Dh)
+    zero = jnp.zeros((B, KVH, 1, Dh), q.dtype)
+    out = _paged_call(qg, k_pool, v_pool, zero, zero, block_tables,
+                      context_lens, window=window, softcap=softcap,
+                      fused_new=False, interpret=interpret)
     return out.reshape(B, H, Dh)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "interpret"))
+def paged_attention_fused(q, k_new, v_new, k_pool, v_pool, block_tables,
+                          pos, *, window: int = 0, softcap: float = 0.0,
+                          interpret: bool = True):
+    """Fused decode step: ``pos[b]`` tokens are in the pool and the current
+    token's (k_new, v_new) — shape (B, KVH, Dh) — enters the softmax as an
+    operand at position ``pos[b]`` without a pool read. Returns (B, H, Dh).
+
+    The caller owns the pool scatter (the append itself); this kernel only
+    *reads* positions < pos, so append and attention have no data dependence.
+    """
+    B, H, Dh = q.shape
+    KVH = k_pool.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Dh)
+    kn = k_new.reshape(B, KVH, 1, Dh).astype(k_pool.dtype)
+    vn = v_new.reshape(B, KVH, 1, Dh).astype(v_pool.dtype)
+    out = _paged_call(qg, k_pool, v_pool, kn, vn, block_tables, pos,
+                      window=window, softcap=softcap, fused_new=True,
+                      interpret=interpret)
+    return out.reshape(B, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# jnp fallback (CPU/GPU): gather over the *given* table width
+# ---------------------------------------------------------------------------
+def paged_gather_attention(q, k_pool, v_pool, block_tables, pos, *,
+                           window: int = 0, softcap: float = 0.0):
+    """Decode attention via gather + dense masked softmax (non-TPU path).
+
+    Contract: the pool already holds ``pos[b] + 1`` tokens for row b (the
+    current token was appended at position ``pos[b]`` before the call). Cost
+    is linear in ``block_tables.shape[1]`` — the engine truncates tables to
+    the power-of-two bucket of the live max, so HBM/memory traffic follows
+    the *live* context, not ``max_blocks_per_seq``.
+    """
+    # lazy import: qlinear -> kernels.ops -> this module at import time.
+    from repro.models.layers import naive_attention
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    gk = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    gv = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    out = naive_attention(q[:, None], gk, gv, causal=True, q_offset=pos,
+                          window=window, softcap=softcap)
+    return out[:, 0]

@@ -15,8 +15,17 @@ def wna16_gemm_ref(x, packed, scales, zeros, *, bits: int, group: int,
     return x.astype(jnp.float32) @ w
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens):
-    """Gather-then-dense-softmax oracle. Shapes as in the kernel."""
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
+                        window: int = 0, softcap: float = 0.0,
+                        k_new=None, v_new=None):
+    """Gather-then-dense-softmax oracle. Shapes as in the kernel.
+
+    ``context_lens[b]`` tokens live in the pool. With ``k_new``/``v_new``
+    (B, KVH, Dh) given, a fused current token sits at position
+    ``context_lens[b]`` (the query position); otherwise the query is the
+    newest pool token at ``context_lens[b] - 1``. ``window`` anchors a
+    sliding window at the query position; ``softcap`` tanh-caps the logits.
+    """
     B, H, Dh = q.shape
     num_blocks, bs, KVH, _ = k_pool.shape
     G = H // KVH
@@ -25,10 +34,24 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens):
     # gather per-sequence KV: (B, max_nb, bs, KVH, Dh) → (B, T, KVH, Dh)
     k = k_pool[block_tables].reshape(B, T, KVH, Dh)
     v = v_pool[block_tables].reshape(B, T, KVH, Dh)
+    kpos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    mask = kpos < context_lens[:, None]                      # (B, T)
+    if k_new is not None:
+        k = jnp.concatenate([k, k_new[:, None]], axis=1)     # (B, T+1, KVH, Dh)
+        v = jnp.concatenate([v, v_new[:, None]], axis=1)
+        kpos = jnp.concatenate([kpos, context_lens[:, None]], axis=1)
+        mask = jnp.concatenate(
+            [mask, jnp.ones((B, 1), bool)], axis=1)
+        qpos = context_lens
+    else:
+        qpos = context_lens - 1
+    if window > 0:
+        mask &= kpos > (qpos[:, None] - window)
     qg = q.reshape(B, KVH, G, Dh).astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
     s = s * (Dh ** -0.5)
-    mask = jnp.arange(T)[None, :] < context_lens[:, None]    # (B, T)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hypcompat import given, settings, hst
 
 from repro.configs import ServingConfig, reduced, MORPH_LLAMA2_7B
 from repro.core import (MemoryLedger, MorphingActuator, MorphingController,

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hypcompat import given, settings, hst
 
 from repro.kernels import ops, ref
 from repro.kernels.wna16_gemm import wna16_gemm
@@ -91,6 +91,93 @@ def test_paged_attention_table_permutation_invariance(seed, bs, maxnb):
                                    jnp.array(perm[tables]), jnp.array(lens))
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 5, 23])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_paged_attention_window_softcap(window, softcap):
+    """Extended-kernel parity: sliding window + logit softcap vs oracle."""
+    B, H, KVH, Dh, nblocks, bs, maxnb = 3, 8, 2, 32, 16, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(window * 7 + 1), 5)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KVH, Dh))
+    tables = jax.random.randint(ks[3], (B, maxnb), 0, nblocks)
+    lens = jax.random.randint(ks[4], (B,), 1, maxnb * bs + 1)
+    out = ops.paged_attention(q, kp, vp, tables, lens,
+                              window=window, softcap=softcap)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lens,
+                                   window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def _fused_case(seed, B, H, KVH, Dh, bs, maxnb):
+    """Random decode-step case honouring the engine's block-ownership
+    contract: live table entries are globally distinct (the append must not
+    alias another row's context)."""
+    nblocks = B * maxnb + 1
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KVH, Dh))
+    tables = jnp.array(1 + rng.permutation(B * maxnb).reshape(B, maxnb),
+                       jnp.int32)
+    pos = jnp.array(rng.integers(0, maxnb * bs, size=B), jnp.int32)  # ragged
+    kn = jax.random.normal(ks[3], (B, KVH, Dh))
+    vn = jax.random.normal(ks[4], (B, KVH, Dh))
+    return q, kp, vp, tables, pos, kn, vn
+
+
+@pytest.mark.parametrize("B,H,KVH,Dh,bs,maxnb", [
+    (2, 8, 2, 64, 16, 4),     # GQA G=4
+    (3, 4, 4, 32, 8, 3),      # MHA G=1
+    (1, 16, 1, 128, 16, 6),   # MQA G=16
+])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (7, 0.0), (0, 25.0),
+                                            (11, 25.0)])
+def test_paged_attention_fused_decode(B, H, KVH, Dh, bs, maxnb, window,
+                                      softcap):
+    """Fused single-token append: Pallas-interpret AND the jnp gather
+    fallback must both match the oracle across GQA group sizes, sliding
+    window, softcap, and ragged per-row context lengths."""
+    from repro.kernels import paged_attention as pa
+    q, kp, vp, tables, pos, kn, vn = _fused_case(
+        B * H + Dh + window, B, H, KVH, Dh, bs, maxnb)
+    want = ref.paged_attention_ref(q, kp, vp, tables, pos, window=window,
+                                   softcap=softcap, k_new=kn, v_new=vn)
+    out = pa.paged_attention_fused(q, kn, vn, kp, vp, tables, pos,
+                                   window=window, softcap=softcap,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # jnp fallback contract: pool already holds the appended token
+    blk = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    kp1 = kp.at[blk, pos % bs].set(kn)
+    vp1 = vp.at[blk, pos % bs].set(vn)
+    out2 = pa.paged_gather_attention(q, kp1, vp1, tables, pos, window=window,
+                                     softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_bucketed_tables():
+    """ops.paged_decode_attention must be invariant to truncating the block
+    table to any width that still covers the live context (the engine's
+    bucketed-gather optimization)."""
+    B, H, KVH, Dh, bs, maxnb = 2, 8, 4, 32, 8, 8
+    q, kp, vp, tables, _, kn, vn = _fused_case(5, B, H, KVH, Dh, bs, maxnb)
+    pos = jnp.array([11, 4], jnp.int32)          # live blocks: 2 and 1
+    blk = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    kp1 = kp.at[blk, pos % bs].set(kn)
+    vp1 = vp.at[blk, pos % bs].set(vn)
+    full = ops.paged_decode_attention(q, kn, vn, kp1, vp1, tables, pos)
+    for nb_t in (2, 4):                          # pow2 buckets >= live max
+        out = ops.paged_decode_attention(q, kn, vn, kp1, vp1,
+                                         tables[:, :nb_t], pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=1e-6, atol=1e-6)
 
 
 def test_paged_matches_dense_attention():

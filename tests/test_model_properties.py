@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hypcompat import given, settings, hst
 
 from repro.configs import SSMConfig, reduced, MORPH_LLAMA2_7B, ASSIGNED
 from repro.models import layers as L

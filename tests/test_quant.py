@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hypcompat import given, settings, hst
 
 from repro.quant import (QTensor, activation_magnitude, pack,
                          quantize_linear_awq, quantize_tensor, quantize_tree,

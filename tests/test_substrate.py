@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hypcompat import given, settings, hst
 
 from repro import checkpoint as ckpt
 from repro.data import DataConfig, batch_at
