@@ -1,9 +1,11 @@
 """Kernel microbenchmarks: wNa16 GEMM + paged attention + decode step.
 
-Wall-time on this CPU container measures the *jnp dequant path* (what XLA
-executes here); the Pallas kernels are interpret-mode-validated and their
-TPU benefit is reported via the roofline byte model (weights traffic 4x/2x
-lower).
+``wna16_bench`` measures the quantized fast path at decode shapes
+(M ∈ {1, 8, 16}, int4/int8): the fused path (Pallas on TPU; the XLA-fused
+packed-dequant fallback on this container) vs an unfused dequant-then-matmul
+that materializes the fp32 weight, plus elastic pool-resize latency with and
+without capacity bucketing → ``BENCH_wna16.json``. The modeled HBM weight
+bytes are the TPU story (packed bytes only vs a dequantized fp32 round-trip).
 
 The decode-step benchmark measures the engine's fused decode attention op
 (``ops.paged_decode_attention``) at a fixed ``max_nb`` with the block table
@@ -21,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
+from repro.configs import reduced, MORPH_LLAMA2_7B
+from repro.engine.kv_cache import PagedKVPool
 from repro.engine.model_exec import pad_bucket
 from repro.kernels import ops, ref
 from repro.quant import qlinear, quantize_tensor
@@ -28,20 +32,6 @@ from repro.quant import qlinear, quantize_tensor
 
 def run(smoke: bool = False):
     rows = []
-    K, N = (512, 512) if smoke else (2048, 2048)
-    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
-    for M in ((1, 16) if smoke else (1, 16, 128)):
-        x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
-        dense = jax.jit(lambda x, w: x @ w)
-        us_dense = timeit(lambda: jax.block_until_ready(dense(x, w)))
-        for bits in (8, 4):
-            qt = quantize_tensor(w, bits=bits, group=128)
-            qmm = jax.jit(lambda x, qt=qt: qlinear.matmul(x, qt))
-            us_q = timeit(lambda: jax.block_until_ready(qmm(x)))
-            hbm_ratio = qt.nbytes / (w.size * 2)      # vs bf16 weights
-            rows.append((f"wna16_M{M}_int{bits}", us_q,
-                         f"dense_us={us_dense:.0f};hbm_bytes_ratio="
-                         f"{hbm_ratio:.3f}"))
     # paged attention (jnp reference path)
     B, H, KVH, Dh, nb, bs = 8, 32, 8, 128, 256, 16
     maxnb = 16 if smoke else 64
@@ -56,6 +46,93 @@ def run(smoke: bool = False):
     rows.append((f"paged_attn_B{B}_H{H}_T{maxnb*bs}", us,
                  "jnp_gather_path"))
     return rows
+
+
+def wna16_bench(smoke: bool = False):
+    """Quantized fast path at decode shapes: fused epilogue path vs
+    dequant-then-matmul, plus elastic pool-resize latency with and without
+    capacity bucketing. Emits ``BENCH_wna16.json``.
+
+    Wall-clock on this container measures what actually executes here (the
+    XLA-fused packed-dequant fallback for the fused path; two dispatches
+    with a materialized fp32 weight for the unfused one). The modeled HBM
+    weight traffic is the TPU story: the fused kernel reads only the packed
+    bytes, the unfused path additionally writes + re-reads the dequantized
+    fp32 weight.
+    """
+    K, N, group = (512, 512, 128) if smoke else (2048, 2048, 128)
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
+    dense_f32 = K * N * 4
+    gemm_rows = []
+    ratios = {}
+    for bits in (4, 8):
+        qt = quantize_tensor(w, bits=bits, group=group)
+        qk = qt.with_use_kernel()
+        fused_bytes = qt.nbytes
+        dequant_bytes = qt.nbytes + 2 * dense_f32   # deq write + GEMM read
+        ratios[bits] = fused_bytes / dequant_bytes
+        for M in (1, 8, 16):
+            x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+            fused = jax.jit(lambda x, qt=qk: qlinear.matmul(x, qt))
+            us_fused = timeit(lambda: jax.block_until_ready(fused(x)))
+            deq = jax.jit(lambda qt: qt.dequantize(jnp.float32))
+            mm = jax.jit(lambda x, wd: x @ wd)
+            us_unfused = timeit(
+                lambda: jax.block_until_ready(mm(x, deq(qt))))
+            row = {"name": f"wna16_M{M}_int{bits}", "M": M, "bits": bits,
+                   "K": K, "N": N, "group": group,
+                   "fused_us": us_fused, "dequant_matmul_us": us_unfused,
+                   "fused_weight_bytes": fused_bytes,
+                   "dequant_weight_bytes": dequant_bytes,
+                   "weight_bytes_ratio": fused_bytes / dequant_bytes,
+                   "weight_bytes_vs_bf16": fused_bytes / (K * N * 2)}
+            if M == 1:
+                # kernel-body validation-mode timing (not a perf number)
+                prev = ops.set_quant_kernel_mode("pallas_interpret")
+                try:
+                    fi = jax.jit(lambda x, qt=qk: qlinear.matmul(x, qt))
+                    row["pallas_interpret_us"] = timeit(
+                        lambda: jax.block_until_ready(fi(x)), n=2, warmup=1)
+                finally:
+                    ops.set_quant_kernel_mode(prev)
+            gemm_rows.append(row)
+
+    # elastic KV pool resize: within-bucket metadata update vs legacy copy
+    cfg = reduced(MORPH_LLAMA2_7B)
+    base = 64 if smoke else 256
+    lo, hi = base + 1, base + base // 4      # both inside bucket(base + 1)
+    resize_rows = []
+    for bucketed in (True, False):
+        pool = PagedKVPool(cfg, lo, 16, bucket_capacity=bucketed)
+        state = {"cur": lo}
+
+        def flip(pool=pool, state=state):
+            nxt = hi if state["cur"] == lo else lo
+            assert pool.resize(nxt)
+            state["cur"] = nxt
+            jax.block_until_ready(pool.k)
+
+        us = timeit(flip)
+        resize_rows.append({
+            "name": f"pool_resize_{'bucketed' if bucketed else 'legacy'}",
+            "us_per_resize": us, "blocks": (lo, hi),
+            "capacity": pool.capacity, "device_copies": pool.copies})
+    speedup = resize_rows[1]["us_per_resize"] / \
+        max(resize_rows[0]["us_per_resize"], 1e-9)
+    payload = {
+        "config": {"K": K, "N": N, "group": group,
+                   "backend": jax.default_backend(), "smoke": smoke,
+                   "quant_kernel_mode": ops.quant_kernel_mode()},
+        "gemm": gemm_rows,
+        "resize": resize_rows,
+        "fused_weight_bytes_ratio_int4": ratios[4],
+        "fused_weight_bytes_ratio_int8": ratios[8],
+        "resize_within_bucket_speedup": speedup,
+    }
+    out = os.environ.get("BENCH_WNA16_JSON", "BENCH_wna16.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
 
 
 def decode_bench(smoke: bool = False):
@@ -122,6 +199,18 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in run(smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}")
+    wpay = wna16_bench(smoke=args.smoke)
+    for r in wpay["gemm"]:
+        print(f"{r['name']},{r['fused_us']:.1f},"
+              f"dequant_us={r['dequant_matmul_us']:.1f};"
+              f"weight_bytes_ratio={r['weight_bytes_ratio']:.3f}")
+    for r in wpay["resize"]:
+        print(f"{r['name']},{r['us_per_resize']:.1f},"
+              f"copies={r['device_copies']}")
+    print(f"wna16 int4 modeled weight-byte ratio (fused/dequant): "
+          f"{wpay['fused_weight_bytes_ratio_int4']:.3f}")
+    print(f"pool resize within-bucket speedup: "
+          f"{wpay['resize_within_bucket_speedup']:.1f}x")
     payload = decode_bench(smoke=args.smoke)
     for r in payload["results"]:
         print(f"{r['name']},{r['us_per_call']:.1f},"

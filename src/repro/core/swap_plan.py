@@ -94,9 +94,11 @@ def build_sim_swap_plan(cfg: ModelConfig, order: Sequence[int], *,
 def build_swap_plan(cfg: ModelConfig, params, order: Sequence[int], *,
                     serving: Optional[ServingConfig] = None,
                     bits: int = 4, group: int = 128,
-                    levels: Optional[Sequence[int]] = None) -> SwapPlan:
+                    levels: Optional[Sequence[int]] = None,
+                    use_kernel: bool = False) -> SwapPlan:
     fp_layers = lm.params_to_layer_list(cfg, params)
-    q_layers = [quantize_tree(lp, bits=bits, group=group)
+    q_layers = [quantize_tree(lp, bits=bits, group=group,
+                              use_kernel=use_kernel)
                 for _, lp in fp_layers]
     fp_bytes = [tree_bytes(lp) for _, lp in fp_layers]
     q_bytes = [tree_bytes(q) for q in q_layers]

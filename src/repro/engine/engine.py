@@ -51,6 +51,14 @@ class EngineConfig:
     # shared bucketed length (attention/MLA families; SSM state is
     # position-exact and keeps the per-request path).
     batch_prefill: bool = True
+    # route swapped-layer matmuls through the fused wNa16 kernel path
+    # (None => inherit ServingConfig.use_quant_kernel)
+    use_quant_kernel: Optional[bool] = None
+    # preallocate the paged KV pool to power-of-two capacity buckets so
+    # within-bucket morph-tick resizes are O(1) metadata updates (no device
+    # pool copy, no new decode jit specialization). Disable to force the
+    # seed's copy-per-resize pool.
+    kv_capacity_bucketing: bool = True
 
 
 class MorphServeEngine:
@@ -66,13 +74,17 @@ class MorphServeEngine:
         # --- morphing substrate -------------------------------------------
         order = list(swap_order) if swap_order is not None \
             else front_to_back_order(cfg.n_layers)
+        self.use_quant_kernel = (serving.use_quant_kernel
+                                 if ecfg.use_quant_kernel is None
+                                 else ecfg.use_quant_kernel)
         if ecfg.compute == "sim":
             from repro.core.swap_plan import build_sim_swap_plan
             self.plan = build_sim_swap_plan(cfg, order, serving=serving,
                                             bits=serving.swap_bits)
         else:
             self.plan = build_swap_plan(cfg, params, order, serving=serving,
-                                        bits=serving.swap_bits)
+                                        bits=serving.swap_bits,
+                                        use_kernel=self.use_quant_kernel)
         self.actuator = MorphingActuator(self.plan)
         self.controller = MorphingController(serving, self.plan)
         self.monitor = ServingMonitor()
@@ -118,7 +130,8 @@ class MorphServeEngine:
         self.resizer = KVResizer(self.ledger, baseline_blocks=baseline_blocks,
                                  step_frac=serving.kv_resize_step_frac)
         self.pool = PagedKVPool(cfg, start_blocks + 1, bs,
-                                dtype=jnp.dtype(ecfg.dtype))  # +1 scratch
+                                dtype=jnp.dtype(ecfg.dtype),  # +1 scratch
+                                bucket_capacity=ecfg.kv_capacity_bucketing)
 
         # --- decode slots + SSM state pools ---------------------------------
         self.slots = serving.max_batch_slots

@@ -98,24 +98,49 @@ class BlockAllocator:
 
 
 class PagedKVPool:
-    """Owns the device pool arrays + allocator."""
+    """Owns the device pool arrays + allocator.
+
+    **Capacity bucketing** (default on): the device arrays are preallocated
+    to the power-of-two bucket of the logical block count, and the allocator
+    tracks ``num_blocks`` separately. A morph-tick grow/shrink that stays
+    within the current bucket is an O(1) host-side metadata update — no
+    device pool copy, and (since jitted callables key on the *array* shape)
+    no new decode executable. Cross-bucket resizes copy exactly once per
+    bucket transition, so the pool contributes at most
+    ``log2(max_blocks)`` shapes to the jit cache. ``copies`` counts device
+    pool copies for the benchmarks/tests. Disable with
+    ``bucket_capacity=False`` to recover the seed's copy-per-resize
+    behaviour (capacity == num_blocks at all times).
+    """
 
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, *, bucket_capacity: bool = True):
         self.cfg = cfg
         self.block_size = block_size
         self.dtype = dtype
+        self.bucket_capacity = bucket_capacity
         L = cfg.n_layers
         if cfg.mla is not None:
             width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
             self.kvh, self.dh = 1, width
         else:
             self.kvh, self.dh = cfg.n_kv_heads, cfg.resolved_head_dim
-        shape = (L, num_blocks, block_size, self.kvh, self.dh)
+        self.capacity = self._cap_bucket(num_blocks)
+        self.copies = 0
+        shape = (L, self.capacity, block_size, self.kvh, self.dh)
         self.k = jnp.zeros(shape, dtype)
         self.v = (jnp.zeros(shape, dtype) if cfg.mla is None
                   else jnp.zeros((1,), dtype))     # MLA: latent-only pool
         self.alloc = BlockAllocator(num_blocks)
+
+    def _cap_bucket(self, n: int) -> int:
+        """Physical capacity for ``n`` logical blocks."""
+        if not self.bucket_capacity:
+            return n
+        b = 1
+        while b < n:
+            b *= 2
+        return b
 
     @property
     def num_blocks(self) -> int:
@@ -132,24 +157,36 @@ class PagedKVPool:
 
     # ------------------------------------------------------------------
     def resize(self, new_num_blocks: int) -> bool:
-        """Grow by concatenation / shrink free tail. Returns success."""
+        """O(delta) elastic resize. Returns success.
+
+        Within the current capacity bucket this is metadata-only (allocator
+        grow / free-tail shrink). Crossing a bucket boundary grows by
+        concatenation / slices the tail — one device copy per transition.
+        """
         old = self.num_blocks
         if new_num_blocks == old:
             return True
         if new_num_blocks > old:
-            extra = new_num_blocks - old
-            pad = [(0, 0)] * self.k.ndim
-            pad[1] = (0, extra)
-            self.k = jnp.pad(self.k, pad)
-            if self.cfg.mla is None:
-                self.v = jnp.pad(self.v, pad)
+            new_cap = self._cap_bucket(new_num_blocks)
+            if new_cap > self.capacity:
+                pad = [(0, 0)] * self.k.ndim
+                pad[1] = (0, new_cap - self.capacity)
+                self.k = jnp.pad(self.k, pad)
+                if self.cfg.mla is None:
+                    self.v = jnp.pad(self.v, pad)
+                self.capacity = new_cap
+                self.copies += 1
             self.alloc.grow(new_num_blocks)
             return True
         if not self.alloc.shrink(new_num_blocks):
             return False
-        self.k = self.k[:, :new_num_blocks]
-        if self.cfg.mla is None:
-            self.v = self.v[:, :new_num_blocks]
+        new_cap = self._cap_bucket(new_num_blocks)
+        if new_cap < self.capacity:
+            self.k = self.k[:, :new_cap]
+            if self.cfg.mla is None:
+                self.v = self.v[:, :new_cap]
+            self.capacity = new_cap
+            self.copies += 1
         return True
 
 

@@ -69,18 +69,21 @@ def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, *,
     out = ops.paged_decode_attention(
         q[:, 0], k[:, 0], v[:, 0], pool_k[li], pool_v[li], tables, pos,
         window=window, softcap=cfg.logit_softcap)
-    y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"])
-    if cfg.attn_out_bias:
-        y = y + p["bo"]
+    y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"], bias=p.get("bo"))
     return y, pool_k, pool_v
 
 
 def _paged_mla_decode(p, cfg, x, pool_k, li, tables, pos):
-    """MLA with the latent pool (KVH=1, Dh=r+rope). Absorbed-weight scoring."""
+    """MLA with the latent pool (KVH=1, Dh=r+rope). Absorbed-weight scoring.
+
+    Expects the decode-prepared attn params (``absorb_mla_decode_weights``):
+    ``wk_abs``/``wv_abs`` replace ``w_ukv``, so the dequant + reshape of the
+    absorbed projection happens once per swap level, not once per token
+    inside the jitted step.
+    """
     m = cfg.mla
     slots = x.shape[0]
     bs = pool_k.shape[2]
-    H = cfg.n_heads
     q_nope, q_rope, c_kv_new, k_rope_new = L._mla_qkv(p, cfg, x, pos[:, None])
     latent_new = jnp.concatenate([c_kv_new[:, 0], k_rope_new[:, 0, 0]], -1)
     blk_idx = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
@@ -89,12 +92,7 @@ def _paged_mla_decode(p, cfg, x, pool_k, li, tables, pos):
     c_kv, k_rope = jnp.split(lat, [m.kv_lora_rank], axis=-1)
     T = c_kv.shape[1]
     kv_len = pos + 1
-    w_ukv = (p["w_ukv"].dequantize(jnp.float32)
-             if qlinear.is_quantized(p["w_ukv"])
-             else p["w_ukv"].astype(jnp.float32))
-    w_ukv = w_ukv.reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
-    wk = w_ukv[..., :m.qk_nope_head_dim]
-    wv = w_ukv[..., m.qk_nope_head_dim:]
+    wk, wv = p["wk_abs"], p["wv_abs"]                    # (r, H, dk), (r, H, dv)
     q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), wk)
     s = (jnp.einsum("bshr,btr->bhst", q_abs, c_kv.astype(jnp.float32))
          + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
@@ -232,18 +230,48 @@ def paged_prefill_batch(cfg: ModelConfig, kinds, misc, layer_params, tokens,
     return last, pool_k, pool_v
 
 
+def absorb_mla_decode_weights(cfg: ModelConfig, layer_params):
+    """Precompute the absorbed MLA projection for the decode path.
+
+    ``w_ukv`` (possibly a QTensor) is dequantized + reshaped ONCE here —
+    outside the jitted step — into ``wk_abs`` (r, H, dk) / ``wv_abs``
+    (r, H, dv); the per-token decode previously redid that dequant every
+    step. Cached per swap level by :class:`ModelExec`.
+    """
+    m = cfg.mla
+    H = cfg.n_heads
+    out = []
+    for p in layer_params:
+        attn = p.get("attn") if isinstance(p, dict) else None
+        if attn is None or "w_ukv" not in attn:
+            out.append(p)
+            continue
+        w = attn["w_ukv"]
+        wd = (w.dequantize(jnp.float32) if qlinear.is_quantized(w)
+              else w.astype(jnp.float32))
+        wd = wd.reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+        attn = {k: v for k, v in attn.items() if k != "w_ukv"}
+        attn["wk_abs"] = wd[..., :m.qk_nope_head_dim]
+        attn["wv_abs"] = wd[..., m.qk_nope_head_dim:]
+        out.append(dict(p, attn=attn))
+    return tuple(out)
+
+
 class ModelExec:
     """Owns the jit caches for prefill/decode at each (level, pool, bucket).
 
     Layer *kinds* never change with swapping, so they're baked statically;
     only the per-layer param pytrees (dense vs QTensor) vary by level — jit
     re-specializes per pytree structure, which is exactly the bounded
-    per-level executable cache."""
+    per-level executable cache. For MLA archs the decode path additionally
+    caches the absorbed ``w_ukv`` projection per layer list (i.e. per swap
+    level — the actuator hands out one stable list per level)."""
 
     def __init__(self, cfg: ModelConfig, params, kinds):
         self.cfg = cfg
         self.kinds = tuple(kinds)
         self.misc = {k: v for k, v in params.items() if k != "segments"}
+        self._absorb_cache: Dict[int, Tuple[Any, Any]] = {}
         self._decode_jit = jax.jit(
             functools.partial(paged_decode_step, cfg, self.kinds),
             donate_argnums=(4, 5, 7, 8))
@@ -254,9 +282,21 @@ class ModelExec:
             functools.partial(paged_prefill_batch, cfg, self.kinds),
             donate_argnums=(3, 4))
 
+    def _decode_params(self, layer_list):
+        """Per-layer decode params; MLA absorbed weights hoisted + cached."""
+        lp = tuple(p for _, p in layer_list)
+        if self.cfg.mla is None:
+            return lp
+        hit = self._absorb_cache.get(id(layer_list))
+        if hit is None or hit[0] is not layer_list:
+            # keep a reference to the source list so its id stays valid
+            hit = (layer_list, absorb_mla_decode_weights(self.cfg, lp))
+            self._absorb_cache[id(layer_list)] = hit
+        return hit[1]
+
     def decode(self, layer_list, tokens, pos, pool_k, pool_v, tables,
                ssm_conv, ssm_ssm):
-        lp = tuple(p for _, p in layer_list)
+        lp = self._decode_params(layer_list)
         return self._decode_jit(self.misc, lp, tokens, pos,
                                 pool_k, pool_v, tables, ssm_conv, ssm_ssm)
 

@@ -1,32 +1,82 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (CPU container executes the kernel
-bodies in Python for correctness); on a real TPU backend the same call sites
-compile to Mosaic.
-
 ``paged_decode_attention`` is the engine's decode attention hot path: on TPU
 it is the fused Pallas kernel (block walk + fused single-token append);
 elsewhere it lowers to a bucketed jnp gather whose cost follows the caller's
 block-table width (the engine truncates tables to the live power-of-two
 bucket) instead of ``max_blocks_per_seq``.
+
+``wna16_matmul`` is the one quantized-matmul path of the data plane. Platform
+dispatch (``REPRO_QUANT_KERNEL`` env var or :func:`set_quant_kernel_mode`):
+
+  * ``auto``             — compiled Pallas on TPU, XLA fallback elsewhere
+  * ``pallas``           — compiled Pallas (Mosaic) unconditionally
+  * ``pallas_interpret`` — Pallas interpret mode (kernel-body validation on
+                           CPU; used by the parity/token-identity tests)
+  * ``xla``              — packed-dequant fallback: dequantize + matmul +
+                           epilogue in one traced graph, fused by XLA
+
+The mode is read at trace time — set it before building jitted callables
+(the engine's per-instance jit caches make this safe per engine).
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import paged_attention as pa
 from repro.kernels.wna16_gemm import wna16_gemm as _gemm
+
+_QUANT_KERNEL_MODES = ("auto", "pallas", "pallas_interpret", "xla")
+_quant_kernel_mode = os.environ.get("REPRO_QUANT_KERNEL", "auto")
+
+
+def set_quant_kernel_mode(mode: str) -> str:
+    """Set the wNa16 dispatch mode; returns the previous mode."""
+    global _quant_kernel_mode
+    assert mode in _QUANT_KERNEL_MODES, (mode, _QUANT_KERNEL_MODES)
+    prev = _quant_kernel_mode
+    _quant_kernel_mode = mode
+    return prev
+
+
+def quant_kernel_mode() -> str:
+    """Resolved dispatch mode (``auto`` resolves by backend)."""
+    if _quant_kernel_mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _quant_kernel_mode
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def wna16_matmul(x2, qt):
-    """x2: (M, K) × QTensor (K, N) → (M, N) float32."""
+def _xla_packed_matmul(x2, qt, bias):
+    """Packed-dequant fallback, one traced graph so XLA fuses the epilogue.
+    Numerically identical to the default jnp QTensor path."""
+    if qt.inv_act is not None:
+        x2 = x2 * qt.inv_act.astype(x2.dtype)
+    y = jnp.matmul(x2, qt.dequantize(x2.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def wna16_matmul(x2, qt, *, bias=None):
+    """x2: (M, K) × QTensor (K, N) → (M, N) in ``x2.dtype``.
+
+    Fused epilogue: AWQ ``inv_act`` equalization, optional ``bias`` (N,),
+    cast to the activation dtype — no fp32 round-trips through HBM.
+    """
     assert qt.bits in (4, 8), "Pallas path supports int4/int8 (DESIGN.md §2)"
-    return _gemm(x2, qt.packed, qt.scales, qt.zeros, bits=qt.bits,
-                 group=qt.group, interpret=_interpret())
+    mode = quant_kernel_mode()
+    if mode == "xla":
+        return _xla_packed_matmul(x2, qt, bias)
+    return _gemm(x2, qt.packed, qt.scales, qt.zeros, qt.inv_act, bias,
+                 bits=qt.bits, group=qt.group, out_dtype=jnp.dtype(x2.dtype),
+                 interpret=(mode == "pallas_interpret"))
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,

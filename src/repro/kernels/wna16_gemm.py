@@ -6,13 +6,29 @@ right before the MXU matmul, so HBM traffic is the *packed* weight bytes —
 4x (int4) / 2x (int8) less than bf16. Decode is weight-bandwidth-bound, which
 is exactly why swapped layers speed up TPOT (paper Fig. 7).
 
-Grid: (M/bm, N/bn, K/bk), K innermost; the (bm, bn) output block stays
-resident in VMEM across the K sweep and is accumulated in fp32.
+The whole epilogue is fused so the serving data plane never round-trips an
+fp32 weight or activation through HBM:
+
+  out = cast((x * inv_act) @ dequant(packed) + bias, out_dtype)
+
+``inv_act`` is the AWQ activation-equalization reciprocal (QTensor.inv_act),
+``bias`` the layer bias, and the accumulator stays fp32 in VMEM scratch
+regardless of ``out_dtype``.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the (bm, bn) fp32 accumulator stays
+resident in VMEM scratch across the K sweep. ``bm`` auto-selects from
+{8, 16, 32, 64, 128} — decode GEMMs (M = batch slots) get skinny 8/16-row
+blocks instead of padding to 128.
 
 Weight layout (matches quant/pack.py):
   int4: (K/2, N) uint8, low nibble = even k, high nibble = odd k
   int8: (K, N) uint8
-  scales/zeros: (K/group, N) float32 — bk must be a multiple of ``group``.
+  scales/zeros: (K/group, N) float32.
+
+The K block size is always a multiple of ``group`` (and even, for int4):
+scales/zeros are built at the caller's group size, so shrinking the group to
+fit a block — what this file did before — silently misindexes them. Instead
+``bk`` is resliced to the largest group multiple dividing K.
 """
 from __future__ import annotations
 
@@ -21,6 +37,31 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BM_CANDIDATES = (8, 16, 32, 64, 128)
+
+
+def _pick_bm(M: int) -> int:
+    """Decode-skinny M blocking: smallest aligned block covering M."""
+    for c in _BM_CANDIDATES:
+        if M <= c:
+            return c
+    return _BM_CANDIDATES[-1]
+
+
+def _pick_bk(K: int, group: int, bits: int, bk: int) -> int:
+    """Largest K block <= ``bk`` that divides K and is a multiple of the
+    quantization group (and of 2 for nibble-packed int4)."""
+    quantum = group
+    if bits == 4 and quantum % 2:
+        quantum *= 2
+    assert K % quantum == 0, (K, group, bits)
+    m = K // quantum
+    d = max(1, min(bk // quantum, m))
+    while m % d:
+        d -= 1
+    return quantum * d
 
 
 def _dequant_block(w_ref, s_ref, z_ref, bits: int, bk: int, group: int):
@@ -37,37 +78,55 @@ def _dequant_block(w_ref, s_ref, z_ref, bits: int, bk: int, group: int):
     return (q - z) * s
 
 
-def _wna16_kernel(x_ref, w_ref, s_ref, z_ref, o_ref, *, bits: int, bk: int,
-                  group: int, n_k: int):
+def _wna16_kernel(*refs, bits: int, bk: int, group: int, n_k: int,
+                  has_inv: bool, has_bias: bool):
+    """refs: x, w, s, z, [inv_act], [bias], out, acc_scratch."""
+    it = iter(refs)
+    x_ref, w_ref, s_ref, z_ref = next(it), next(it), next(it), next(it)
+    inv_ref = next(it) if has_inv else None
+    b_ref = next(it) if has_bias else None
+    o_ref, acc_ref = next(it), next(it)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     w = _dequant_block(w_ref, s_ref, z_ref, bits, bk, group)
     x = x_ref[...].astype(jnp.float32)             # (bm, bk)
-    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if has_inv:
+        x = x * inv_ref[...].astype(jnp.float32)   # (1, bk) broadcast
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "group", "bm", "bn",
-                                             "bk", "interpret"))
-def wna16_gemm(x, packed, scales, zeros, *, bits: int, group: int,
-               bm: int = 128, bn: int = 128, bk: int = 512,
+@functools.partial(jax.jit, static_argnames=("bits", "group", "out_dtype",
+                                             "bm", "bn", "bk", "interpret"))
+def wna16_gemm(x, packed, scales, zeros, inv_act=None, bias=None, *,
+               bits: int, group: int, out_dtype=None,
+               bm: int = 0, bn: int = 128, bk: int = 512,
                interpret: bool = True):
-    """x: (M, K) × packed int{4,8} (K-packed, N) → (M, N) float32.
+    """x: (M, K) × packed int{4,8} (K-packed, N) → (M, N) ``out_dtype``.
 
-    M is padded to ``bm``; K, N must divide by (bk, bn) and bk % group == 0.
+    ``inv_act`` (K,) and ``bias`` (N,) are optional fused-epilogue operands;
+    ``out_dtype`` defaults to ``x.dtype``. M is padded to the auto-selected
+    skinny block; K must be divisible by the resliced ``bk`` (always a group
+    multiple); N is blocked at the largest power-of-two divisor <= ``bn``.
     """
     M, K = x.shape
     N = scales.shape[-1]
-    bm = min(bm, max(8, M))
-    bk = min(bk, K)
+    out_dtype = jnp.dtype(out_dtype or x.dtype)
+    bm = bm or _pick_bm(M)
+    bk = _pick_bk(K, group, bits, min(bk, K))
     bn = min(bn, N)
-    while K % bk:
-        bk //= 2
-    while bk % group:
-        group //= 2
+    while N % bn:
+        bn //= 2
     assert K % bk == 0 and N % bn == 0 and bk % group == 0, (K, N, bk, group)
     pad_m = (-M) % bm
     if pad_m:
@@ -77,18 +136,29 @@ def wna16_gemm(x, packed, scales, zeros, *, bits: int, group: int,
     grid = (Mp // bm, N // bn, n_k)
 
     kdiv = 2 if bits == 4 else 1
+    has_inv = inv_act is not None
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk // kdiv, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, packed, scales, zeros]
+    if has_inv:
+        in_specs.append(pl.BlockSpec((1, bk), lambda i, j, k: (0, k)))
+        operands.append(inv_act.reshape(1, K))
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias.reshape(1, N))
     out = pl.pallas_call(
         functools.partial(_wna16_kernel, bits=bits, bk=bk, group=group,
-                          n_k=n_k),
+                          n_k=n_k, has_inv=has_inv, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk // kdiv, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, packed, scales, zeros)
+    )(*operands)
     return out[:M]

@@ -65,7 +65,8 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 
 def encode(cfg: ModelConfig, params, frames, *, ctx: ShardCtx = NO_SHARD):
     """frames: (B, n_frames, frontend_dim) → encoder states (B, T, D)."""
-    x = qlinear.matmul(frames, params["adapter"]["w"]) + params["adapter"]["b"]
+    x = qlinear.matmul(frames, params["adapter"]["w"],
+                       bias=params["adapter"]["b"])
     x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
 
     def step(x, blk):

@@ -304,11 +304,11 @@ def gqa_init(key, cfg, dtype):
 def gqa_project_qkv(p, cfg, x, positions):
     B, S, _ = x.shape
     H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q = qlinear.matmul(x, p["wq"])
-    k = qlinear.matmul(x, p["wk"])
-    v = qlinear.matmul(x, p["wv"])
-    if cfg.qkv_bias:
-        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # qkv biases ride the matmul epilogue (fused into the wNa16 kernel on
+    # the quantized path)
+    q = qlinear.matmul(x, p["wq"], bias=p.get("bq"))
+    k = qlinear.matmul(x, p["wk"], bias=p.get("bk"))
+    v = qlinear.matmul(x, p["wv"], bias=p.get("bv"))
     q = q.reshape(B, S, H, Dh)
     k = k.reshape(B, S, KVH, Dh)
     v = v.reshape(B, S, KVH, Dh)
@@ -332,18 +332,13 @@ def gqa_apply(p, cfg, x, *, window: int = 0, ctx: ShardCtx = NO_SHARD,
                              softcap=cfg.logit_softcap, ctx=ctx)
     else:
         H, Dh = cfg.n_heads, cfg.resolved_head_dim
-        q = qlinear.matmul(x, p["wq"])
-        if cfg.qkv_bias:
-            q = q + p["bq"]
+        q = qlinear.matmul(x, p["wq"], bias=p.get("bq"))
         q = q.reshape(B, S, H, Dh)
         k, v = cross_kv
         out = attention_core(q, k, v, causal=False,
                              softcap=cfg.logit_softcap, ctx=ctx)
     out = ctx.constrain(out, (ctx.data_axis, None, ctx.model_axis, None))
-    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"])
-    if cfg.attn_out_bias:
-        y = y + p["bo"]
-    return y
+    return qlinear.matmul(out.reshape(B, S, -1), p["wo"], bias=p.get("bo"))
 
 
 def gqa_decode(p, cfg, x, cache, *, window: int = 0, cross_kv=None):
@@ -366,18 +361,14 @@ def gqa_decode(p, cfg, x, cache, *, window: int = 0, cross_kv=None):
         cache = dict(cache, k=ck, v=cv, pos=pos + 1)
     else:
         H, Dh = cfg.n_heads, cfg.resolved_head_dim
-        q = qlinear.matmul(x, p["wq"])
-        if cfg.qkv_bias:
-            q = q + p["bq"]
+        q = qlinear.matmul(x, p["wq"], bias=p.get("bq"))
         q = q.reshape(B, 1, H, Dh)
         k, v = cross_kv
         out = naive_attention(q, k, v, causal=False,
                               softcap=cfg.logit_softcap)
         cache = dict(cache, pos=pos + 1)
-    y = qlinear.matmul(out.reshape(B, 1, -1), p["wo"])
-    if cfg.attn_out_bias:
-        y = y + p["bo"]
-    return y, cache
+    return qlinear.matmul(out.reshape(B, 1, -1), p["wo"],
+                          bias=p.get("bo")), cache
 
 
 def gqa_prefill(p, cfg, x, *, window: int = 0, ctx: ShardCtx = NO_SHARD):
@@ -387,9 +378,7 @@ def gqa_prefill(p, cfg, x, *, window: int = 0, ctx: ShardCtx = NO_SHARD):
     q, k, v = gqa_project_qkv(p, cfg, x, positions)
     out = attention_core(q, k, v, causal=True, window=window,
                          softcap=cfg.logit_softcap, ctx=ctx)
-    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"])
-    if cfg.attn_out_bias:
-        y = y + p["bo"]
+    y = qlinear.matmul(out.reshape(B, S, -1), p["wo"], bias=p.get("bo"))
     return y, (k, v)
 
 
@@ -547,14 +536,9 @@ def mlp_init(key, cfg, d_ff=None, dtype=jnp.float32):
 
 def mlp_apply(p, cfg, x):
     act = _ACTS[cfg.act]
-    up = qlinear.matmul(x, p["w_up"])
-    if cfg.mlp_bias:
-        up = up + p["b_up"]
+    up = qlinear.matmul(x, p["w_up"], bias=p.get("b_up"))
     if "w_gate" in p:
         h = act(qlinear.matmul(x, p["w_gate"])) * up
     else:
         h = act(up)
-    y = qlinear.matmul(h, p["w_down"])
-    if cfg.mlp_bias:
-        y = y + p["b_down"]
-    return y
+    return qlinear.matmul(h, p["w_down"], bias=p.get("b_down"))

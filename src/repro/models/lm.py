@@ -210,8 +210,8 @@ def embed_tokens(cfg, params, tokens, frontend=None):
     emb = jnp.take(params["embed"], tokens, axis=0)
     if cfg.family == VLM:
         assert frontend is not None, "vlm needs patch embeddings"
-        pe = qlinear.matmul(frontend, params["projector"]["w"]) \
-            + params["projector"]["b"]
+        pe = qlinear.matmul(frontend, params["projector"]["w"],
+                            bias=params["projector"]["b"])
         emb = jnp.concatenate([pe.astype(emb.dtype), emb], axis=1)
     return emb
 

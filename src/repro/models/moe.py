@@ -35,8 +35,15 @@ def moe_init(key, cfg, dtype):
 
 
 def _expert_matmul(xg, w):
-    """(E, C, D) x (E, D, F) -> (E, C, F); w may be a stacked QTensor."""
+    """(E, C, D) x (E, D, F) -> (E, C, F); w may be a stacked QTensor.
+
+    Kernel-flagged stacked QTensors unroll into one fused wNa16 GEMM per
+    expert (E is static), so expert weights stream packed from HBM instead
+    of round-tripping a dequantized copy."""
     if qlinear.is_quantized(w):
+        if w.use_kernel and w.bits in (4, 8):
+            return jnp.stack([qlinear.matmul(xg[e], w.expert(e))
+                              for e in range(xg.shape[0])])
         w = w.dequantize(xg.dtype)
     return jnp.einsum("ecd,edf->ecf", xg, w.astype(xg.dtype))
 

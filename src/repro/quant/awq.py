@@ -54,15 +54,17 @@ def search_awq_scale(x_samples, w, *, bits: int = 4, group: int = 128,
     return best[0], best[1], errs
 
 
-def quantize_linear_awq(x_samples, w, *, bits: int = 4,
-                        group: int = 128) -> QTensor:
+def quantize_linear_awq(x_samples, w, *, bits: int = 4, group: int = 128,
+                        use_kernel: bool = False) -> QTensor:
     """AWQ-quantize a (K, N) weight given calibration activations."""
     s, _, _ = search_awq_scale(x_samples, w, bits=bits, group=group)
-    return quantize_tensor(w, bits=bits, group=group, act_scale=s)
+    return quantize_tensor(w, bits=bits, group=group, act_scale=s,
+                           use_kernel=use_kernel)
 
 
 def quantize_tree(params, *, bits: int = 4, group: int = 128,
-                  min_size: int = 1 << 14, calib_acts=None):
+                  min_size: int = 1 << 14, calib_acts=None,
+                  use_kernel: bool = False):
     """Quantize every 2-D weight leaf of a layer's param tree (RTN per-group;
     AWQ equalization when ``calib_acts`` maps the leaf path to activations).
 
@@ -81,9 +83,11 @@ def quantize_tree(params, *, bits: int = 4, group: int = 128,
             acts = calib_acts.get(key) if calib_acts else None
             if acts is not None:
                 out.append(quantize_linear_awq(acts, leaf, bits=bits,
-                                               group=group))
+                                               group=group,
+                                               use_kernel=use_kernel))
             else:
-                out.append(quantize_tensor(leaf, bits=bits, group=group))
+                out.append(quantize_tensor(leaf, bits=bits, group=group,
+                                           use_kernel=use_kernel))
         elif (hasattr(leaf, "ndim") and leaf.ndim == 3
                 and leaf.size >= min_size):
             # stacked expert weights (E, K, N): quantize each expert
@@ -95,7 +99,8 @@ def quantize_tree(params, *, bits: int = 4, group: int = 128,
                 jnp.stack([q.scales for q in qts]),
                 jnp.stack([q.zeros for q in qts]),
                 bits=bits, group=qts[0].group, K=leaf.shape[1],
-                N=leaf.shape[2], out_dtype=leaf.dtype))
+                N=leaf.shape[2], out_dtype=leaf.dtype,
+                use_kernel=use_kernel))
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)

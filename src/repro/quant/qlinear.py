@@ -4,6 +4,13 @@
 ``linear()`` call in the model zoo dispatches on the leaf type, so swapping a
 layer between precisions is a pure pytree substitution — the mechanism behind
 MorphServe's LayerSwapper on TPU (see DESIGN.md §2).
+
+``use_kernel`` rides in the pytree *aux data*: a QTensor flagged for the
+fused wNa16 path produces a different treedef than an unflagged one, so the
+engine's per-structure jit caches specialize correctly and every matmul over
+flagged weights routes through ``kernels/ops.wna16_matmul`` (Pallas on TPU,
+XLA-fused packed-dequant elsewhere) without threading a flag through each
+call site.
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ class QTensor:
     """Packed, group-quantized weight of logical shape (K, N)."""
 
     def __init__(self, packed, scales, zeros, *, bits: int, group: int,
-                 K: int, N: int, out_dtype=jnp.float32, inv_act=None):
+                 K: int, N: int, out_dtype=jnp.float32, inv_act=None,
+                 use_kernel: bool = False):
         self.packed = packed
         self.scales = scales
         self.zeros = zeros
@@ -32,18 +40,22 @@ class QTensor:
         # AWQ equalization: weights were scaled by ``act_scale`` before
         # quantization, so activations must be multiplied by ``inv_act``.
         self.inv_act = inv_act
+        # route matmuls over this weight through the fused wNa16 kernel path
+        self.use_kernel = use_kernel
 
     # pytree protocol ------------------------------------------------------
     def tree_flatten(self):
         return ((self.packed, self.scales, self.zeros, self.inv_act),
-                (self.bits, self.group, self.K, self.N, self.out_dtype))
+                (self.bits, self.group, self.K, self.N, self.out_dtype,
+                 self.use_kernel))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scales, zeros, inv_act = children
-        bits, group, K, N, out_dtype = aux
+        bits, group, K, N, out_dtype, use_kernel = aux
         return cls(packed, scales, zeros, bits=bits, group=group, K=K, N=N,
-                   out_dtype=out_dtype, inv_act=inv_act)
+                   out_dtype=out_dtype, inv_act=inv_act,
+                   use_kernel=use_kernel)
 
     # ----------------------------------------------------------------------
     @property
@@ -56,6 +68,23 @@ class QTensor:
                 + self.scales.size * self.scales.dtype.itemsize
                 + self.zeros.size * self.zeros.dtype.itemsize)
 
+    def with_use_kernel(self, use_kernel: bool = True) -> "QTensor":
+        """Same weight, different matmul routing (leaves are shared)."""
+        return QTensor(self.packed, self.scales, self.zeros, bits=self.bits,
+                       group=self.group, K=self.K, N=self.N,
+                       out_dtype=self.out_dtype, inv_act=self.inv_act,
+                       use_kernel=use_kernel)
+
+    def expert(self, e: int) -> "QTensor":
+        """2-D view of expert ``e`` of a stacked (E, K, N) QTensor."""
+        assert self.packed.ndim == 3, "expert() needs a stacked QTensor"
+        return QTensor(self.packed[e], self.scales[e], self.zeros[e],
+                       bits=self.bits, group=self.group, K=self.K, N=self.N,
+                       out_dtype=self.out_dtype,
+                       inv_act=None if self.inv_act is None
+                       else self.inv_act[e],
+                       use_kernel=self.use_kernel)
+
     def dequantize(self, dtype=None):
         q = packing.unpack(self.packed, self.bits, self.K)
         return packing.dequantize_groupwise(
@@ -64,11 +93,11 @@ class QTensor:
 
     def __repr__(self):
         return (f"QTensor(int{self.bits}, K={self.K}, N={self.N}, "
-                f"group={self.group})")
+                f"group={self.group}, use_kernel={self.use_kernel})")
 
 
 def quantize_tensor(w, bits: int = 4, group: int = 128,
-                    act_scale=None) -> QTensor:
+                    act_scale=None, use_kernel: bool = False) -> QTensor:
     """Quantize a dense (K, N) weight. ``act_scale`` (K,) applies an
     AWQ-style per-input-channel equalization before quantization; the
     reciprocal is stored on the QTensor and folded into activations by
@@ -86,32 +115,37 @@ def quantize_tensor(w, bits: int = 4, group: int = 128,
         g //= 2
     q, s, z = packing.quantize_groupwise(w, bits, g)
     return QTensor(packing.pack(q, bits), s, z, bits=bits, group=g, K=K, N=N,
-                   out_dtype=dtype, inv_act=inv_act)
+                   out_dtype=dtype, inv_act=inv_act, use_kernel=use_kernel)
 
 
 def is_quantized(w) -> bool:
     return isinstance(w, QTensor)
 
 
-def matmul(x, w, *, use_kernel: bool = False):
-    """``x @ w`` where ``w`` is a dense array or a QTensor.
+def matmul(x, w, *, bias=None, use_kernel: bool = False):
+    """``x @ w (+ bias)`` where ``w`` is a dense array or a QTensor.
 
-    ``use_kernel`` selects the Pallas wNa16 path (TPU target; validated in
-    interpret mode). The default jnp dequant path lowers to the identical
+    The fused wNa16 path is taken when the weight is flagged
+    (``w.use_kernel``) or the caller forces ``use_kernel=True``; it folds the
+    AWQ ``inv_act`` equalization, ``bias``, and the output cast into the
+    kernel epilogue. The default jnp dequant path lowers to the identical
     math and is what XLA sees in the CPU tests.
     """
     if not is_quantized(w):
-        return jnp.matmul(x, w.astype(x.dtype))
-    if w.inv_act is not None:
-        x = x * w.inv_act.astype(x.dtype)
-    if use_kernel and w.bits in (4, 8):
+        y = jnp.matmul(x, w.astype(x.dtype))
+        return y if bias is None else y + bias
+    if ((use_kernel or w.use_kernel) and w.bits in (4, 8)
+            and w.packed.ndim == 2):
         from repro.kernels import ops as kops
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        out = kops.wna16_matmul(x2, w)
+        out = kops.wna16_matmul(x2, w, bias=bias)
         return out.reshape(*lead, w.N)
+    if w.inv_act is not None:
+        x = x * w.inv_act.astype(x.dtype)
     wd = w.dequantize(x.dtype)
-    return jnp.matmul(x, wd)
+    y = jnp.matmul(x, wd)
+    return y if bias is None else y + bias
 
 
 def weight_nbytes(w) -> int:

@@ -24,7 +24,7 @@ def model():
 
 
 def make_engine(cfg, params, *, blocks=24, policy="morph", mode="performance",
-                slots=4, compute="real", seed=0):
+                slots=4, compute="real", seed=0, **ecfg_kw):
     wb = tree_bytes(params)
     bb = kv_block_bytes(cfg, 16, 4)
     budget = int((wb + blocks * bb) / 0.95) + 2 * bb
@@ -34,7 +34,7 @@ def make_engine(cfg, params, *, blocks=24, policy="morph", mode="performance",
                        kv_resize_step_frac=0.25)
     return MorphServeEngine(cfg, params, sc,
                             EngineConfig(policy=policy, compute=compute,
-                                         seed=seed))
+                                         seed=seed, **ecfg_kw))
 
 
 # --------------------------------------------------------------------------
@@ -67,6 +67,43 @@ def test_pool_resize_grow_preserves_content():
     assert pool.resize(12)
     assert pool.num_blocks == 12
     assert float(pool.k[0, 3, 0, 0, 0]) == 1.5
+
+
+def test_pool_within_bucket_resize_is_metadata_only():
+    """Capacity bucketing: grows/shrinks inside the power-of-two capacity
+    bucket must not copy the device pool (same array objects) nor change
+    its shape (no new decode jit specialization)."""
+    cfg = reduced(MORPH_LLAMA2_7B)
+    pool = PagedKVPool(cfg, 9, 4)            # capacity bucket = 16
+    assert pool.capacity == 16
+    k_obj, v_obj = pool.k, pool.v
+    assert pool.resize(12) and pool.resize(15) and pool.resize(10)
+    assert pool.k is k_obj and pool.v is v_obj
+    assert pool.copies == 0
+    assert pool.num_blocks == 10             # logical size tracked apart
+
+
+def test_pool_cross_bucket_resize_copies_once_and_preserves():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    pool = PagedKVPool(cfg, 9, 4)            # capacity 16
+    pool.k = pool.k.at[0, 3].set(1.5)
+    k_obj = pool.k
+    assert pool.resize(20)                   # bucket 16 -> 32: one copy
+    assert pool.capacity == 32 and pool.copies == 1
+    assert pool.k is not k_obj
+    assert float(pool.k[0, 3, 0, 0, 0]) == 1.5
+    # shrink back below the bucket boundary: exactly one more copy
+    assert pool.resize(8)
+    assert pool.capacity == 8 and pool.copies == 2
+    assert float(pool.k[0, 3, 0, 0, 0]) == 1.5
+
+
+def test_pool_bucketing_disabled_matches_seed_behavior():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    pool = PagedKVPool(cfg, 8, 4, bucket_capacity=False)
+    assert pool.capacity == 8 and pool.k.shape[1] == 8
+    assert pool.resize(12)
+    assert pool.capacity == 12 and pool.k.shape[1] == 12
 
 
 # --------------------------------------------------------------------------
@@ -224,6 +261,97 @@ def test_engine_paged_decode_matches_dense(model):
     while r.state != RState.FINISHED:
         eng.step()
     assert r.generated == dense_out, (r.generated, dense_out)
+
+
+# --------------------------------------------------------------------------
+# quantized fast path (fused wNa16 data plane)
+# --------------------------------------------------------------------------
+def test_engine_quant_kernel_token_identity(model):
+    """Engine with ``use_quant_kernel=True`` (Pallas interpret mode) must be
+    token-identical to the jnp dequant path on a morph trace that crosses
+    swap levels AND performs pressure-driven KV resizes."""
+    from repro.kernels import ops as kops
+    cfg, params = model
+    trace = [TraceRequest(0.001 * i, 24, 12) for i in range(8)]
+
+    def run(use_qk):
+        prev = kops.set_quant_kernel_mode(
+            "pallas_interpret" if use_qk else "xla")
+        try:
+            eng = make_engine(cfg, params, blocks=6, mode="performance",
+                              seed=3, use_quant_kernel=use_qk)
+            eng.run_trace(trace, max_steps=4000)
+        finally:
+            kops.set_quant_kernel_mode(prev)
+        return eng
+
+    eng_jnp = run(False)
+    eng_fused = run(True)
+    # the scenario must actually exercise both runtime mechanisms
+    assert max(t.swap_level for t in eng_fused.monitor.history) > 0
+    assert eng_fused.resize_log, "no KV resize happened on this trace"
+    toks_jnp = [r.generated for r in eng_jnp.all_requests]
+    toks_fused = [r.generated for r in eng_fused.all_requests]
+    assert toks_jnp == toks_fused
+
+
+def test_engine_pool_copies_only_at_bucket_transitions(model):
+    """On a morph trace, the pool pays a device copy exactly when a resize
+    crosses a power-of-two capacity bucket — never within a bucket."""
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=6, mode="performance", seed=3)
+    cap = eng.pool.capacity
+    trace = [TraceRequest(0.001 * i, 24, 12) for i in range(8)]
+    eng.run_trace(trace, max_steps=4000)
+    assert eng.resize_log
+    transitions = 0
+    for _, nb in eng.resize_log:
+        b = eng.pool._cap_bucket(nb + 1)
+        if b != cap:
+            transitions += 1
+            cap = b
+    assert eng.pool.copies == transitions, (eng.pool.copies, transitions)
+
+
+def test_engine_serves_mla_with_absorbed_weight_cache():
+    """MLA engine decode: the absorbed w_ukv dequant/reshape is hoisted out
+    of the jitted step and cached per swap level."""
+    from repro.configs.archs import ASSIGNED
+    cfg = reduced(ASSIGNED["deepseek-v3-671b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    eng = make_engine(cfg, params, blocks=24, policy="static_fp16")
+    trace = [TraceRequest(0.0, 12, 4), TraceRequest(0.0, 18, 4)]
+    rep = eng.run_trace(trace, max_steps=2000)
+    assert rep.n_finished == 2
+    assert eng.exec._absorb_cache, "absorbed-weight cache never populated"
+    (_, prepared), = list(eng.exec._absorb_cache.values())[:1]
+    mla_p = [p for p in prepared
+             if isinstance(p, dict) and "attn" in p and "wk_abs" in p["attn"]]
+    assert mla_p, "no decode layer carries the absorbed projection"
+    assert all("w_ukv" not in p["attn"] for p in mla_p)
+
+
+def test_absorbed_weights_match_quantized_dequant():
+    """absorb_mla_decode_weights on a *quantized* w_ukv equals the in-step
+    dequant it replaces (regression for model_exec.py per-token dequant)."""
+    from repro.engine.model_exec import absorb_mla_decode_weights
+    from repro.quant import quantize_tensor
+    from repro.configs.archs import ASSIGNED
+    cfg = reduced(ASSIGNED["deepseek-v3-671b"])
+    m = cfg.mla
+    K = m.kv_lora_rank
+    N = cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.05
+    qt = quantize_tensor(w, bits=4, group=32)
+    (prep,) = absorb_mla_decode_weights(cfg, ({"attn": {"w_ukv": qt}},))
+    wd = qt.dequantize(jnp.float32).reshape(
+        K, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    np.testing.assert_array_equal(
+        np.asarray(prep["attn"]["wk_abs"]),
+        np.asarray(wd[..., :m.qk_nope_head_dim]))
+    np.testing.assert_array_equal(
+        np.asarray(prep["attn"]["wv_abs"]),
+        np.asarray(wd[..., m.qk_nope_head_dim:]))
 
 
 def test_block_accounting_invariant(model):

@@ -2,6 +2,8 @@
 
 Per the assignment: shape/dtype sweeps with assert_allclose against ref.py.
 """
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +12,16 @@ from hypcompat import given, settings, hst
 
 from repro.kernels import ops, ref
 from repro.kernels.wna16_gemm import wna16_gemm
-from repro.quant import quantize_tensor
+from repro.quant import qlinear, quantize_tensor
+
+
+@contextlib.contextmanager
+def quant_kernel_mode(mode):
+    prev = ops.set_quant_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        ops.set_quant_kernel_mode(prev)
 
 
 @pytest.mark.parametrize("bits", [4, 8])
@@ -27,9 +38,86 @@ def test_wna16_gemm_sweep(bits, M, K, N, G, dtype):
     x = jax.random.normal(k1, (M, K), dtype=jnp.float32).astype(dtype)
     w = jax.random.normal(k2, (K, N)) * 0.05
     qt = quantize_tensor(w, bits=bits, group=G)
-    out = ops.wna16_matmul(x.astype(jnp.float32), qt)
+    with quant_kernel_mode("pallas_interpret"):
+        out = ops.wna16_matmul(x.astype(jnp.float32), qt)
     want = ref.wna16_gemm_ref(x.astype(jnp.float32), qt.packed, qt.scales,
                               qt.zeros, bits=bits, group=qt.group, K=K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # the off-TPU XLA packed-dequant fallback must agree too
+    with quant_kernel_mode("xla"):
+        out2 = ops.wna16_matmul(x.astype(jnp.float32), qt)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("K,N,G", [
+    (768, 128, 384),          # group divides K but not the default bk=512
+    (640, 128, 160),          # ... and not any power-of-two shrink of it
+    (768, 256, 192),
+])
+def test_wna16_gemm_group_not_dividing_default_bk(bits, K, N, G):
+    """Regression: the kernel must reslice the K block to a group multiple.
+
+    The seed halved ``group`` until it divided bk, silently misindexing the
+    scales/zeros built at the caller's group size (K=512-with-group-384-style
+    shapes gave wrong results without any shape error)."""
+    M = 16
+    k1, k2 = jax.random.split(jax.random.PRNGKey(K + G + bits))
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N)) * 0.05
+    qt = quantize_tensor(w, bits=bits, group=G)
+    assert qt.group == G                  # shape really uses the odd group
+    out = wna16_gemm(x, qt.packed, qt.scales, qt.zeros, bits=bits, group=G,
+                     interpret=True)
+    want = ref.wna16_gemm_ref(x, qt.packed, qt.scales, qt.zeros, bits=bits,
+                              group=G, K=K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("awq", [False, True])
+@pytest.mark.parametrize("bias", [False, True])
+@pytest.mark.parametrize("M,K,N,G,dtype", [
+    (1, 256, 128, 128, jnp.float32),      # decode skinny
+    (5, 256, 96, 64, jnp.float32),        # N not a lane multiple
+    (8, 384, 192, 96, jnp.float32),       # non-pow2 everything
+    (16, 256, 128, 128, jnp.bfloat16),    # low-precision activations
+])
+def test_wna16_fused_epilogue_parity(bits, awq, bias, M, K, N, G, dtype):
+    """Fused path (inv_act + bias + out-dtype cast in the kernel epilogue)
+    vs the jnp dequant path, across bits x group x AWQ x bias x shapes."""
+    ks = jax.random.split(jax.random.PRNGKey(M + K + N + bits), 4)
+    x = jax.random.normal(ks[0], (M, K), dtype=jnp.float32).astype(dtype)
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    s = (jnp.exp(jax.random.normal(ks[2], (K,)) * 0.3) if awq else None)
+    b = (jax.random.normal(ks[3], (N,)).astype(dtype) if bias else None)
+    qt = quantize_tensor(w, bits=bits, group=G, act_scale=s)
+    want = qlinear.matmul(x, qt, bias=b)                 # jnp dequant path
+    with quant_kernel_mode("pallas_interpret"):
+        out = qlinear.matmul(x, qt.with_use_kernel(), bias=b)
+    assert out.dtype == want.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_wna16_moe_expert_matmul_fused_parity():
+    """Stacked-expert QTensor matmul: fused per-expert GEMMs == dequant
+    einsum (the MoE hot path under ``use_quant_kernel``)."""
+    from repro.models.moe import _expert_matmul
+    from repro.quant import quantize_tree
+    E, C, D, F = 3, 4, 128, 256
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    xg = jax.random.normal(ks[0], (E, C, D))
+    w = jax.random.normal(ks[1], (E, D, F)) * 0.05
+    qt = quantize_tree({"w": w}, bits=4, group=64)["w"]
+    want = _expert_matmul(xg, qt)
+    with quant_kernel_mode("pallas_interpret"):
+        out = _expert_matmul(xg, qt.with_use_kernel())
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 

@@ -89,6 +89,50 @@ def test_qtensor_bytes_shrink():
         assert qt.nbytes < frac * w.size * 4, (bits, qt.nbytes)
 
 
+def test_qtensor_use_kernel_is_pytree_aux():
+    """use_kernel must ride the treedef (it keys jit specialization), share
+    leaves across with_use_kernel, and survive a flatten/unflatten trip."""
+    w = jnp.ones((256, 128))
+    qt = quantize_tensor(w, bits=4, group=128)
+    qk = qt.with_use_kernel()
+    assert not qt.use_kernel and qk.use_kernel
+    assert qk.packed is qt.packed and qk.scales is qt.scales
+    t1 = jax.tree_util.tree_structure(qt)
+    t2 = jax.tree_util.tree_structure(qk)
+    assert t1 != t2
+    leaves, treedef = jax.tree_util.tree_flatten(qk)
+    rt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rt.use_kernel and rt.group == qk.group
+
+
+def test_qtensor_expert_slice_matches_dequant():
+    from repro.quant import quantize_tree
+    E, K, N = 3, 64, 256
+    w = jax.random.normal(jax.random.PRNGKey(0), (E, K, N)) * 0.1
+    qt = quantize_tree({"w": w}, bits=4, group=32)["w"]
+    for e in range(E):
+        per = quantize_tensor(w[e], bits=4, group=32)
+        np.testing.assert_allclose(
+            np.asarray(qt.expert(e).dequantize(jnp.float32)),
+            np.asarray(per.dequantize(jnp.float32)), rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_bias_epilogue_matches_postadd():
+    """qlinear.matmul(bias=...) == matmul + bias on dense and jnp-quantized
+    paths (the fused-kernel parity is covered in test_kernels)."""
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (5, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (64,))
+    np.testing.assert_array_equal(
+        np.asarray(qlinear.matmul(x, w, bias=b)),
+        np.asarray(qlinear.matmul(x, w) + b))
+    qt = quantize_tensor(w, bits=4, group=64)
+    np.testing.assert_array_equal(
+        np.asarray(qlinear.matmul(x, qt, bias=b)),
+        np.asarray(qlinear.matmul(x, qt) + b))
+
+
 def test_inv_act_folding_math():
     """x @ (s*W) dequantized with x/s equals x @ W up to quant error."""
     k = jax.random.PRNGKey(3)
