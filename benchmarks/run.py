@@ -25,6 +25,8 @@ SECTIONS = [
      "Fig 7: TPOT distribution per policy"),
     ("swap_overhead", "benchmarks.swap_overhead",
      "§3.3: layer swap transfer overhead"),
+    ("serving_bench", "benchmarks.serving_bench",
+     "end-to-end: bursty trace, chunked prefill, morph on/off TTFT gate"),
     ("kernel_bench", "benchmarks.kernel_bench",
      "kernels: wNa16 GEMM + paged attention microbench"),
     ("roofline", "benchmarks.roofline",

@@ -1,0 +1,122 @@
+"""End-to-end serving smoke: bursty trace replay, morph-on vs morph-off.
+
+Replays a short ``burstgpt_like`` trace in simulated compute (virtual L4
+clock, paper-scale model) through the token-budgeted step loop with
+``max_tokens_per_step`` set **below the longest prompt**, so long prompts
+stream through the paged pool in chunks while decodes keep stepping.
+Two policies share the trace:
+
+  * ``morph_on``  — the paper's system (performance mode: layer swapping,
+                    KV resizing, chunk-budget actuator)
+  * ``morph_off`` — ``static_fp16`` baseline (same engine, morphing off)
+
+Emits ``BENCH_serving.json`` with ttft_p95 / slo_violation_rate /
+degraded_token_frac per policy plus the chunked-prefill liveness counters
+CI gates on: morph-on ttft_p95 <= morph-off ttft_p95, and zero decode-free
+steps while a prefill backlog existed (decode never head-of-line blocks
+behind a prompt burst).
+
+``PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ServingConfig, MORPH_LLAMA2_7B
+from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
+                          burstgpt_like)
+
+MAX_TOKENS_PER_STEP = 256
+
+
+def make_trace(duration_s: float):
+    return burstgpt_like(duration_s=duration_s, base_rps=1.2, seed=5,
+                         prompt_mean=512, gen_mean=192,
+                         prompt_max=1024, gen_max=384)
+
+
+def run_policy(policy: str, trace, *, max_steps: int = 60000):
+    """Replay ``trace``; returns (engine, report). Decode liveness is read
+    off the engine's own ``decode_stall_steps`` / ``mixed_steps`` counters
+    (a stall = a request that was decoding at step start produced no token
+    and was not evicted while prefill ran beside it)."""
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=48, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8, 16), mode="performance",
+                       kv_resize_step_frac=0.125)
+    eng = MorphServeEngine(MORPH_LLAMA2_7B, None, sc,
+                           EngineConfig(policy=policy, compute="sim",
+                                        hw=NVIDIA_L4, dtype="bfloat16",
+                                        seed=1,
+                                        max_tokens_per_step=MAX_TOKENS_PER_STEP))
+    rep = eng.run_trace(trace, max_steps=max_steps)
+    return eng, rep
+
+
+def leg_stats(eng, rep):
+    return {
+        "ttft_p95": rep.ttft_p95,
+        "ttft_avg": rep.ttft_avg,
+        "slo_violation_rate": rep.slo_violation_rate,
+        "degraded_token_frac": rep.degraded_token_frac,
+        "throughput_tok_s": rep.throughput_tok_s,
+        "preemptions": rep.preemptions,
+        "n_requests": rep.n_requests,
+        "n_finished": rep.n_finished,
+        "decode_free_steps_with_backlog": eng.decode_stall_steps,
+        "mixed_steps": eng.mixed_steps,
+        "chunked_requests": sum(1 for r in eng.all_requests
+                                if r.prefill_chunks >= 2),
+        "max_swap_level": max((t.swap_level for t in eng.monitor.history),
+                              default=0),
+        "min_chunk_budget": min((t.chunk_budget for t in eng.monitor.history),
+                                default=MAX_TOKENS_PER_STEP),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    duration = 18.0 if smoke else 36.0
+    trace = make_trace(duration)
+    longest = max(t.prompt_len for t in trace)
+    out = {"trace": {"kind": "burstgpt_like", "duration_s": duration,
+                     "n_requests": len(trace), "longest_prompt": longest},
+           "max_tokens_per_step": MAX_TOKENS_PER_STEP}
+    assert longest > MAX_TOKENS_PER_STEP, \
+        "trace must force chunking (budget below the longest prompt)"
+    print("policy,ttft_p95_s,slo_viol,degraded_tok,thpt_tok_s,preempt,"
+          "chunked_reqs,decode_free_steps")
+    for key, policy in (("morph_on", "morph"), ("morph_off", "static_fp16")):
+        eng, rep = run_policy(policy, trace)
+        out[key] = leg_stats(eng, rep)
+        s = out[key]
+        print(f"{key},{s['ttft_p95']:.3f},{s['slo_violation_rate']:.2%},"
+              f"{s['degraded_token_frac']:.2%},{s['throughput_tok_s']:.0f},"
+              f"{s['preemptions']},{s['chunked_requests']},"
+              f"{s['decode_free_steps_with_backlog']}")
+    on, off = out["morph_on"], out["morph_off"]
+    out["gates"] = {
+        "ttft_p95_ratio": (on["ttft_p95"] / off["ttft_p95"]
+                           if off["ttft_p95"] else 1.0),
+        "morph_on_ttft_p95_le_off": bool(on["ttft_p95"] <= off["ttft_p95"]),
+        "zero_decode_free_steps": bool(
+            on["decode_free_steps_with_backlog"] == 0
+            and off["decode_free_steps_with_backlog"] == 0),
+        "chunking_engaged": bool(on["chunked_requests"] > 0
+                                 and off["chunked_requests"] > 0),
+    }
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# ttft_p95 morph-on/off = {out['gates']['ttft_p95_ratio']:.2f}x "
+          f"(gate: <= 1.0); slo_viol {on['slo_violation_rate']:.2%} vs "
+          f"{off['slo_violation_rate']:.2%}; degraded_tok "
+          f"{on['degraded_token_frac']:.2%}; wrote BENCH_serving.json")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter trace for CI")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

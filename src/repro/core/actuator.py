@@ -71,5 +71,10 @@ class MorphingActuator:
     def busy(self) -> bool:
         return self._inflight is not None
 
+    @property
+    def inflight_target(self) -> Optional[int]:
+        """Level the in-flight swap is moving to (None when idle)."""
+        return None if self._inflight is None else self._inflight.target_level
+
     def weight_bytes(self) -> int:
         return self.plan.weight_bytes(self.level)

@@ -25,6 +25,15 @@ class MorphCommand:
     reason: str
     grow_kv: bool = False             # hint: expand pool after level applies
     shrink_kv: bool = False
+    # third actuator (chunked prefill): halve / restore the engine's
+    # per-step token budget so admission itself backs off under pressure
+    # before (and alongside) swapping layers or resizing the pool.
+    # shrink_chunk is the controller's pressure *hint* — the engine only
+    # acts on it while a relief swap is in flight (a permanently shrunk
+    # budget just trades TTFT away; see BENCH_serving.json), so at max
+    # level sustained load intentionally runs at full budget.
+    shrink_chunk: bool = False
+    grow_chunk: bool = False
 
 
 class MorphingController:
@@ -62,14 +71,23 @@ class MorphingController:
                 why = (f"kv_usage={kv:.2f}" if kv > self.high_watermark()
                        else f"queue_delay={qd * 1e3:.0f}ms")
                 return MorphCommand(target_level=nxt, grow_kv=True,
+                                    shrink_chunk=True,
                                     reason=f"pressure high ({why})")
             # already at max level — still grant KV growth if possible
             return MorphCommand(target_level=self.level, grow_kv=True,
+                                shrink_chunk=True,
                                 reason="pressure high (at max level)")
-        if low and self.level > 0:
-            nxt = self._next_down(self.level)
-            return MorphCommand(target_level=nxt, shrink_kv=True,
-                                reason=f"pressure low (kv_usage={kv:.2f})")
+        if low:
+            if self.level > 0:
+                nxt = self._next_down(self.level)
+                return MorphCommand(target_level=nxt, shrink_kv=True,
+                                    grow_chunk=True,
+                                    reason=f"pressure low (kv_usage={kv:.2f})")
+            if signals.get("chunk_budget_frac", 1.0) < 1.0:
+                # already at fp16 — only the admission budget is left to
+                # restore (no level move, no KV command)
+                return MorphCommand(target_level=0, grow_chunk=True,
+                                    reason="pressure low (restore chunk budget)")
         return None
 
     def commit(self, level: int) -> None:

@@ -23,6 +23,14 @@ class Telemetry:
     swap_level: int
     step_time_s: float
     preemptions: int = 0
+    # token-budgeted step composition (chunked prefill observability):
+    # single-token decodes executed, prompt-chunk tokens packed beside them,
+    # prompt tokens still unpaged across PREFILLING + eligible queued
+    # requests, and the live per-step token budget.
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    prefill_backlog_tokens: int = 0
+    chunk_budget: int = 0
 
     @property
     def kv_usage(self) -> float:

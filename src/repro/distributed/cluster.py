@@ -204,6 +204,14 @@ class ServingCluster:
                     dt = e.step()
                     if r.slow_factor != 1.0:      # straggler runs slower
                         e.now += dt * (r.slow_factor - 1.0)
+                        # the replica's own monitor measures wall time, so
+                        # the slowdown must show up in its telemetry — the
+                        # token-budgeted step loop equalizes *modeled* step
+                        # cost across replicas, so the modeled dt alone no
+                        # longer exposes a straggler
+                        if e.monitor.history:
+                            e.monitor.history[-1].step_time_s = \
+                                dt * r.slow_factor
             self.now = target
             self._detect_and_recover()
             done = (ti >= len(trace) and fi >= len(faults)

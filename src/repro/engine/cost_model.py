@@ -112,25 +112,42 @@ class CostModel:
     def decode_step_time(self, batch: int, total_ctx_tokens: int,
                          weight_bytes: float, level_frac_flops: float = 1.0
                          ) -> float:
-        """One decode step for ``batch`` sequences w/ given total KV tokens."""
-        if batch == 0:
+        """One decode-only step (a mixed step with no prefill tokens)."""
+        return self.mixed_step_time(batch, total_ctx_tokens, 0, 0.0, 0,
+                                    weight_bytes, level_frac_flops)
+
+    def mixed_step_time(self, decode_batch: int, decode_ctx_tokens: int,
+                        prefill_tokens: int, prefill_attn_pairs: float,
+                        prefill_kv_tokens: int, weight_bytes: float,
+                        level_frac_flops: float = 1.0) -> float:
+        """One token-budgeted engine step: ``decode_batch`` single-token
+        decodes over ``decode_ctx_tokens`` of live KV plus ``prefill_tokens``
+        prompt-chunk tokens packed into the same iteration.
+
+        ``prefill_attn_pairs`` is the number of causal (q, kv) score pairs
+        across this step's chunks (sum of clen·pos0 + clen²/2 — the chunk
+        attends to everything already paged); ``prefill_kv_tokens`` is the
+        paged context the chunks re-read. Weights are fetched once for the
+        whole mixed batch — the reason packing chunks beside decodes beats
+        running them as separate steps."""
+        if decode_batch == 0 and prefill_tokens == 0:
             return self.fixed_overhead_s
-        flops = 2.0 * self._active * batch * level_frac_flops
-        kv_read = total_ctx_tokens * self.kv_bytes_per_token()
+        flops = (2.0 * self._active * (decode_batch + prefill_tokens)
+                 * level_frac_flops)
+        if self.cfg.n_heads and prefill_attn_pairs:
+            h, dh = cfg_heads(self.cfg)
+            flops += 4.0 * self.cfg.n_layers * h * dh * prefill_attn_pairs
+        kv_read = ((decode_ctx_tokens + prefill_kv_tokens)
+                   * self.kv_bytes_per_token())
         t_compute = flops / self.hw.flops
         t_mem = (weight_bytes + kv_read) / self.hw.hbm_bw
         return max(t_compute, t_mem) + self.fixed_overhead_s
 
     def prefill_time(self, prompt_tokens: int) -> float:
-        flops = 2.0 * self._active * prompt_tokens
-        # quadratic attention term
-        if self.cfg.n_heads:
-            h, dh = cfg_heads(self.cfg)
-            flops += (4.0 * self.cfg.n_layers * h * dh
-                      * prompt_tokens * prompt_tokens / 2)
-        t_compute = flops / self.hw.flops
-        t_mem = self._total * self.dtype_bytes / self.hw.hbm_bw
-        return max(t_compute, t_mem) + self.fixed_overhead_s
+        """A whole prompt as its own step (fp16-resident weights)."""
+        return self.mixed_step_time(0, 0, prompt_tokens,
+                                    prompt_tokens * prompt_tokens / 2, 0,
+                                    self._total * self.dtype_bytes)
 
 
 def cfg_heads(cfg: ModelConfig):

@@ -59,6 +59,19 @@ class EngineConfig:
     # pool copy, no new decode jit specialization). Disable to force the
     # seed's copy-per-resize pool.
     kv_capacity_bucketing: bool = True
+    # --- token-budgeted step loop (Sarathi-style chunked prefill) --------
+    # each step packs up to this many tokens: every live decode token first,
+    # the remainder filled with prompt chunks — so decode throughput is never
+    # head-of-line blocked behind a long prompt. <= 0 disables budgeting
+    # (legacy whole-prompt admission).
+    max_tokens_per_step: int = 256
+    # stream prompts longer than the leftover budget through the paged pool
+    # in bucketed chunks (attention/MLA real compute; every family in sim).
+    # False admits whole prompts only, still budget-gated.
+    chunked_prefill: bool = True
+    # floor for the live budget when the morph controller shrinks it under
+    # pressure (third actuator beside swap level and KV blocks)
+    min_chunk_tokens: int = 32
 
 
 class MorphServeEngine:
@@ -161,9 +174,19 @@ class MorphServeEngine:
         self.queue: Deque[Request] = collections.deque()
         self.all_requests: List[Request] = []
         self._next_rid = 0
-        self._n_live = 0          # requests in QUEUED/RUNNING/PREEMPTED
+        self._n_live = 0          # requests in QUEUED/PREFILLING/RUNNING/PREEMPTED
         self.rejected = 0
         self.resize_log: List = []
+        # live per-step token budget (morph controller's third actuator:
+        # shrunk toward min_chunk_tokens under pressure, restored on drain)
+        self.chunk_budget = ecfg.max_tokens_per_step
+        self.chunk_log: List = []
+        # liveness invariant counters (gated by CI's serving smoke): steps
+        # where a request that was decoding at step start neither produced
+        # a token nor was preempted while prefill work ran beside it, and
+        # steps that packed decode + prompt chunks into one iteration
+        self.decode_stall_steps = 0
+        self.mixed_steps = 0
 
     # ------------------------------------------------------------------
     # request admission / lifecycle
@@ -194,46 +217,161 @@ class MorphServeEngine:
 
     @property
     def running(self) -> List[Request]:
+        """Slot occupants: decoding (RUNNING) + chunk-prefilling requests."""
         return [r for r in self._slot_req if r is not None]
 
+    @property
+    def decoding(self) -> List[Request]:
+        return [r for r in self._slot_req
+                if r is not None and r.state == RState.RUNNING]
+
     # ------------------------------------------------------------------
-    def _try_prefill(self) -> float:
-        """Admit up to max_prefills_per_step queued requests — one batched
-        jitted call when possible. Returns the modeled time spent."""
-        admitted: List[Request] = []
-        while self.queue and len(admitted) < self.ec.max_prefills_per_step:
+    # token-budgeted scheduling (chunked prefill)
+    # ------------------------------------------------------------------
+    def _can_chunk(self) -> bool:
+        if not self.ec.chunked_prefill or self.ec.max_tokens_per_step <= 0:
+            return False
+        # SSM/hybrid recurrent state is position-exact; real compute keeps
+        # the whole-prompt path there (sim has no state to carry).
+        return self.ec.compute == "sim" or \
+            self.cfg.family not in ("ssm", "hybrid")
+
+    def _prefill_token_budget(self) -> float:
+        """Step budget left for prompt tokens after reserving one token for
+        every live decode — decode never stalls behind prefill."""
+        if self.ec.max_tokens_per_step <= 0:
+            return float("inf")
+        return max(self.chunk_budget - len(self.decoding), 0)
+
+    def _grow_blocks(self, r: Request, need: int) -> bool:
+        """Extend ``r``'s block table to ``need`` blocks, preempting only
+        later-arrived (higher-rid) slot occupants under memory pressure.
+        Returns False when ``r`` must stall this step instead."""
+        while need > len(r.block_ids):
+            got = self.pool.alloc.alloc(1)
+            if got is None:
+                cands = [q for q in self.running if q.rid > r.rid]
+                if not cands:
+                    return False
+                self._preempt(max(cands, key=lambda q: q.rid))
+                continue
+            r.block_ids.extend(got)
+        return True
+
+    def _schedule_prefill(self):
+        """Pick this step's prefill work under the live token budget.
+
+        Chunk continuations (oldest rid first) come before new admissions so
+        started prompts reach their first token early; admissions from the
+        FIFO head take the whole prompt when it fits the leftover budget and
+        start a chunked prefill otherwise. Returns ``(whole, chunks)`` —
+        whole-prompt admissions and ``(request, pos0, chunk_len)`` items."""
+        budget = self._prefill_token_budget()
+        whole: List[Request] = []
+        chunks: List = []
+        for r in sorted(self.running, key=lambda q: q.rid):
+            if budget <= 0:
+                break
+            if r.state != RState.PREFILLING:
+                continue
+            clen = int(min(budget, r.prefill_remaining))
+            target = r.prefill_pos + clen
+            # the completing chunk pre-books the first decode token's block,
+            # matching whole-prompt admission (blocks_for(prompt + 1))
+            need = self.pool.blocks_for(
+                target + 1 if target == r.prompt_len else target)
+            if not self._grow_blocks(r, need):
+                continue                       # stalled on memory this step
+            chunks.append((r, r.prefill_pos, clen))
+            budget -= clen
+        n_admit = 0
+        while (self.queue and budget > 0
+               and n_admit < self.ec.max_prefills_per_step):
             r = self.queue[0]
             if r.arrival_s > self.now:
                 break
             slot = self._free_slot()
-            nb = self.pool.blocks_for(r.prompt_len + 1)
-            if slot is None or nb > self.max_nb:
+            if slot is None:
                 break
-            ids = self.pool.alloc.alloc(nb)
-            if ids is None:
-                break                                   # memory pressure
-            self.queue.popleft()
-            r.slot, r.block_ids, r.state = slot, ids, RState.RUNNING
-            self._slot_req[slot] = r
-            admitted.append(r)
-        if not admitted:
-            return 0.0
-        if self.ec.compute == "real":
-            firsts = self._prefill_real_many(admitted)
-        else:
-            firsts = [int(self.rng.integers(0, self.cfg.vocab))
-                      for _ in admitted]
-        spent = 0.0
-        for r, first in zip(admitted, firsts):
-            spent += self.cost.prefill_time(r.prompt_len)
-            # prefill emits the first token
-            tok_time = self.now + spent
-            r.first_token_s = tok_time
-            r.token_times.append(tok_time)
-            r.token_levels.append(self.actuator.level)
-            r.generated.append(first)
-            self.monitor.record_ttft(tok_time - r.arrival_s)
-        return spent
+            if r.prompt_len <= budget or not self._can_chunk():
+                nb = self.pool.blocks_for(r.prompt_len + 1)
+                if nb > self.max_nb:
+                    break
+                ids = self.pool.alloc.alloc(nb)
+                if ids is None:
+                    break                               # memory pressure
+                self.queue.popleft()
+                r.slot, r.block_ids, r.state = slot, ids, RState.RUNNING
+                r.prefill_pos = r.prompt_len
+                self._slot_req[slot] = r
+                whole.append(r)
+                budget -= r.prompt_len
+            else:
+                clen = int(budget)
+                ids = self.pool.alloc.alloc(self.pool.blocks_for(clen))
+                if ids is None:
+                    break
+                self.queue.popleft()
+                r.slot, r.block_ids, r.state = slot, ids, RState.PREFILLING
+                r.prefill_pos = 0
+                self._slot_req[slot] = r
+                chunks.append((r, 0, clen))
+                budget -= clen
+            n_admit += 1
+        return whole, chunks
+
+    def _exec_prefill(self, whole: List[Request], chunks) -> List[Request]:
+        """Run the scheduled prefill work. First tokens are appended here
+        (so the same-step decode consumes them, seed semantics); timestamps
+        are assigned by ``step()`` once the unified step time is known.
+        Returns the requests that produced their first token."""
+        emitted: List[Request] = []
+        if whole:
+            if self.ec.compute == "real":
+                firsts = self._prefill_real_many(whole)
+            else:
+                firsts = [int(self.rng.integers(0, self.cfg.vocab))
+                          for _ in whole]
+            for r, first in zip(whole, firsts):
+                r.generated.append(first)
+                emitted.append(r)
+        for r, pos0, clen in chunks:
+            if r.state != RState.PREFILLING:
+                continue                        # preempted after scheduling
+            first = None
+            if self.ec.compute == "real":
+                first = self._prefill_chunk_real(r, clen)
+            r.prefill_pos += clen
+            r.prefill_chunks += 1
+            if r.prefill_pos == r.prompt_len:
+                if first is None:               # sim compute
+                    first = int(self.rng.integers(0, self.cfg.vocab))
+                r.state = RState.RUNNING
+                r.generated.append(first)
+                emitted.append(r)
+        return emitted
+
+    def _prefill_chunk_real(self, r: Request, clen: int) -> Optional[int]:
+        """One jitted chunk call: causal attention of prompt[pos0:pos0+clen]
+        against the already-paged context, KV appended in the same call.
+        Chunk length and table width are power-of-two bucketed (bounded
+        recompile set). Returns the first generated token when the chunk
+        completes the prompt, else None."""
+        bs = self.pool.block_size
+        pos0 = r.prefill_pos
+        Cp = model_exec.pad_bucket(clen, bs)
+        nb_t = model_exec.pad_bucket(self.pool.blocks_for(pos0 + Cp), 1)
+        toks = np.zeros((1, Cp), np.int32)
+        toks[0, :clen] = r.prompt[pos0:pos0 + clen]
+        table = np.zeros((nb_t,), np.int32)
+        ids = r.block_ids[:nb_t]
+        table[:len(ids)] = ids
+        logits, self.pool.k, self.pool.v = self.exec.prefill_chunk(
+            self.actuator.layer_list(), jnp.array(toks), jnp.int32(pos0),
+            self.pool.k, self.pool.v, jnp.array(table))
+        if pos0 + clen == r.prompt_len:
+            return int(jnp.argmax(logits[clen - 1]))
+        return None
 
     def _prefill_real_many(self, admitted: List[Request]) -> List[int]:
         """Prefill admitted requests: one batched jitted call at a shared
@@ -305,36 +443,13 @@ class MorphServeEngine:
         r.slot = -1
         r.state = RState.PREEMPTED
         r.preemptions += 1
-        # recompute policy: generated tokens are folded into the prompt
+        # recompute policy: generated tokens are folded into the prompt and
+        # a partial chunked prefill restarts from scratch (blocks are gone)
         r.prompt = r.prompt + r.generated
         r.max_new_tokens -= len(r.generated)
         r.generated = []
+        r.prefill_pos = 0
         self.queue.appendleft(r)
-
-    def _decode_once(self) -> float:
-        run = self.running
-        if not run:
-            return 0.0
-        self._ensure_decode_blocks()
-        run = self.running
-        if not run:
-            return 0.0
-        if self.ec.compute == "real":
-            self._decode_real(run)
-        else:
-            for r in run:
-                r.generated.append(int(self.rng.integers(0, self.cfg.vocab)))
-        total_ctx = sum(r.context_len for r in run)
-        lvl = self.actuator.level
-        dt = self.cost.decode_step_time(
-            len(run), total_ctx, self.plan.weight_bytes(lvl))
-        t = self.now + dt
-        for r in run:
-            r.token_times.append(t)
-            r.token_levels.append(lvl)
-            if r.done:
-                self._finish(r, t)
-        return dt
 
     def _decode_real(self, run: List[Request]) -> None:
         bs = self.pool.block_size
@@ -383,14 +498,39 @@ class MorphServeEngine:
             self.controller.commit(self.actuator.level)
             self.ledger.set_weights(self.actuator.weight_bytes())
         sig = self.monitor.signals()
+        if self.ec.max_tokens_per_step > 0:
+            sig["chunk_budget_frac"] = (self.chunk_budget
+                                        / self.ec.max_tokens_per_step)
         cmd = self.controller.decide(sig)
+        # third actuator: the admission token budget reacts instantly (no
+        # transfer latency). It backs off prefill pressure only while a
+        # relief swap is still in flight and restores as soon as the swap
+        # lands or pressure drains — sustained load is served at full
+        # budget (a permanently shrunk budget just trades TTFT away, see
+        # BENCH_serving.json).
+        if self.ec.max_tokens_per_step > 0:
+            nb = self.chunk_budget
+            if cmd is not None and cmd.shrink_chunk and self.actuator.busy:
+                nb = max(self.ec.min_chunk_tokens, self.chunk_budget // 2)
+            elif (cmd is not None and cmd.grow_chunk) \
+                    or not self.actuator.busy:
+                nb = min(self.ec.max_tokens_per_step, self.chunk_budget * 2)
+            if nb != self.chunk_budget:
+                self.chunk_budget = nb
+                self.chunk_log.append((self.now, nb))
         if cmd is None:
             return
         if cmd.target_level > self.actuator.level and not self.actuator.busy:
             self.actuator.issue(cmd.target_level, self.now)
         if cmd.grow_kv:
-            # grow only against *committed* (already-freed) weight bytes
-            dec = self.resizer.grow(weight_bytes=self.ledger.weight_bytes,
+            # grow only against *committed* (already-freed) weight bytes —
+            # and never into the space an in-flight restore (a swap toward
+            # heavier weights) is about to take back
+            wb_grow = self.ledger.weight_bytes
+            tgt = self.actuator.inflight_target
+            if tgt is not None:
+                wb_grow = max(wb_grow, self.plan.weight_bytes(tgt))
+            dec = self.resizer.grow(weight_bytes=wb_grow,
                                     live_blocks=self.pool.alloc.n_used)
             if dec is not None:
                 self.ledger.resize_kv(dec.new_blocks)
@@ -418,14 +558,66 @@ class MorphServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> float:
-        """One engine iteration; returns elapsed virtual time."""
-        dt = self._try_prefill()
-        dt += self._decode_once()
-        if dt == 0.0:
+        """One token-budgeted engine iteration; returns elapsed virtual time.
+
+        Packs up to ``chunk_budget`` tokens: every live decode token first,
+        the remainder prompt chunks — one mixed batch per step, so decode
+        throughput is never head-of-line blocked behind a long prompt and
+        queued requests' TTFT follows the chunk budget, not the longest
+        prompt in front of them."""
+        dec0 = [(r, len(r.generated), r.preemptions) for r in self.decoding]
+        whole, chunks = self._schedule_prefill()
+        emitted = self._exec_prefill(whole, chunks)
+        pf_tokens = sum(r.prompt_len for r in whole) + \
+            sum(c for _, _, c in chunks)
+        # causal (q, kv) score pairs + paged context the chunks re-read
+        pf_pairs = sum(r.prompt_len ** 2 / 2 for r in whole) + \
+            sum(c * p0 + c * c / 2 for _, p0, c in chunks)
+        pf_kv = sum(p0 + c for _, p0, c in chunks)
+        dec = self.decoding
+        if dec:
+            self._ensure_decode_blocks()
+            dec = self.decoding
+        if dec:
+            if self.ec.compute == "real":
+                self._decode_real(dec)
+            else:
+                for r in dec:
+                    r.generated.append(
+                        int(self.rng.integers(0, self.cfg.vocab)))
+        lvl = self.actuator.level
+        if dec or pf_tokens:
+            total_ctx = sum(r.context_len for r in dec)
+            dt = self.cost.mixed_step_time(
+                len(dec), total_ctx, pf_tokens, pf_pairs, pf_kv,
+                self.plan.weight_bytes(lvl))
+        else:
             dt = 1e-3                                   # idle tick
-        self.now += dt
+        t = self.now + dt
+        for r in emitted:
+            # prefill (whole or final chunk) emits the first token
+            r.first_token_s = t
+            r.token_times.append(t)
+            r.token_levels.append(lvl)
+            self.monitor.record_ttft(t - r.arrival_s)
+        for r in dec:
+            r.token_times.append(t)
+            r.token_levels.append(lvl)
+            if r.done:
+                self._finish(r, t)
+        self.now = t
+        # liveness accounting: a request decoding at step start must have
+        # produced a token (or been evicted) whenever prefill ran beside it
+        if pf_tokens and dec0:
+            self.mixed_steps += 1
+            if any(r.preemptions == p and len(r.generated) <= n
+                   for r, n, p in dec0):
+                self.decode_stall_steps += 1
         oldest = min((r.arrival_s for r in self.queue
                       if r.arrival_s <= self.now), default=None)
+        backlog = sum(r.prefill_remaining for r in self.running
+                      if r.state == RState.PREFILLING) + \
+            sum(r.prompt_len for r in self.queue if r.arrival_s <= self.now)
         self.monitor.observe(Telemetry(
             time_s=self.now,
             kv_used_blocks=self.pool.alloc.n_used,
@@ -433,8 +625,12 @@ class MorphServeEngine:
             queue_len=sum(1 for r in self.queue if r.arrival_s <= self.now),
             oldest_wait_s=(self.now - oldest) if oldest is not None else 0.0,
             running=len(self.running),
-            swap_level=self.actuator.level,
-            step_time_s=dt))
+            swap_level=lvl,
+            step_time_s=dt,
+            decode_tokens=len(dec),
+            prefill_tokens=pf_tokens,
+            prefill_backlog_tokens=backlog,
+            chunk_budget=self.chunk_budget))
         self._morph_tick()
         return dt
 

@@ -50,8 +50,11 @@ def build_report(requests: List[Request], *, ttft_slo_s: float,
     n_tok = sum(len(r.generated) for r in requests)
     viol = sum(1 for t in ttfts if t > ttft_slo_s)
     # unserved/unfinished requests whose wait already exceeds SLO also violate
+    # (a request still short of its SLO window at the horizon is NOT a
+    # violation — it simply hasn't been waiting long enough yet)
     for r in requests:
-        if r.state != RState.FINISHED and r.first_token_s is None:
+        if (r.state != RState.FINISHED and r.first_token_s is None
+                and duration_s - r.arrival_s > ttft_slo_s):
             viol += 1
     deg = [r.degraded_token_frac() for r in fin] or [0.0]
     kv_peak = max((t.kv_usage for t in history), default=0.0) if history else 0.0

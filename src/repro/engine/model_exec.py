@@ -230,6 +230,101 @@ def paged_prefill_batch(cfg: ModelConfig, kinds, misc, layer_params, tokens,
     return last, pool_k, pool_v
 
 
+def _chunk_gqa_attention(p, cfg, x, positions, pool_k, pool_v, li, tables,
+                         blk, off, pos0, *, window: int = 0):
+    """Causal chunk attention against already-paged context (batch 1).
+
+    x: (1, Cp, D) chunk activations at absolute positions ``positions``;
+    the chunk's KV is scattered into layer ``li`` of the pool first (pad
+    positions land in blocks the next chunk overwrites, or in scratch 0),
+    then queries attend over the table gather: position ``pos0 + i`` sees
+    every pool token ``<= pos0 + i`` — bit-equal to whole-prompt prefill
+    because per-token projections are row-independent and the pool round-
+    trip is value-preserving *as long as the pool dtype holds the KV
+    exactly* (the default float32 pool does, for bf16 or f32 activations).
+    A lossy pool (fp8/bf16) makes chunk 2+ attend over rounded KV — the
+    same divergence the pool-backed decode path already has vs dense."""
+    B, Cp, _ = x.shape
+    q, k, v = L.gqa_project_qkv(p, cfg, x, positions)
+    pool_k = pool_k.at[li, blk, off].set(k[0].astype(pool_k.dtype))
+    pool_v = pool_v.at[li, blk, off].set(v[0].astype(pool_v.dtype))
+    out = ops.paged_prefill_attention(q, pool_k[li], pool_v[li],
+                                      tables[None], pos0, window=window,
+                                      softcap=cfg.logit_softcap)
+    y = qlinear.matmul(out.reshape(B, Cp, -1), p["wo"], bias=p.get("bo"))
+    return y, pool_k, pool_v
+
+
+def _chunk_mla_attention(p, cfg, x, positions, pool_k, li, tables, blk, off,
+                         pos0):
+    """MLA chunk attention over the latent pool (KVH=1, Dh=r+rope)."""
+    m = cfg.mla
+    B, Cp, _ = x.shape
+    q_nope, q_rope, c_kv_new, k_rope_new = L._mla_qkv(p, cfg, x, positions)
+    latent_new = jnp.concatenate([c_kv_new[0], k_rope_new[0, :, 0]], -1)
+    pool_k = pool_k.at[li, blk, off, 0].set(latent_new.astype(pool_k.dtype))
+    lat = _gather_kv(pool_k, li, tables[None])[..., 0, :]  # (1, T, r+rope)
+    c_kv, k_rope = jnp.split(lat, [m.kv_lora_rank], axis=-1)
+    k_nope, v = L._mla_expand_kv(p, cfg, c_kv.astype(x.dtype))
+    T = c_kv.shape[1]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :].astype(x.dtype),
+                                  (B, T, cfg.n_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    out = L.naive_attention(q, k, v, causal=True, q_offset=pos0)
+    y = qlinear.matmul(out.reshape(B, Cp, -1), p["wo"])
+    return y, pool_k
+
+
+def paged_prefill_chunk(cfg: ModelConfig, kinds, misc, layer_params, tokens,
+                        pos0, pool_k, pool_v, tables):
+    """Prefill ONE chunk of ONE request against partially-paged context.
+
+    tokens: (1, Cp) — the chunk, end-padded to a bucketed length; pos0:
+    scalar int32 absolute position of tokens[0] (= the request's
+    ``prefill_pos``); tables: (nb,) block table whose span ``nb * bs`` covers
+    at least ``pos0 + Cp`` token positions (scratch 0 where the request owns
+    fewer blocks). Each layer appends the chunk's KV into the pool and runs
+    causal attention of the chunk against everything paged so far, so a long
+    prompt streams through the pool chunk by chunk while decode batches keep
+    stepping between chunks (Sarathi-style chunked prefill).
+
+    Attention/MLA families only — SSM/hybrid recurrent state is
+    position-exact and keeps the whole-prompt path. Returns
+    (chunk logits (Cp, V), pool_k, pool_v)."""
+    bs = pool_k.shape[2]
+    Cp = tokens.shape[1]
+    positions = pos0 + jnp.arange(Cp)[None, :]       # (1, Cp)
+    abs_pos = positions[0]
+    blk = tables[abs_pos // bs]                       # (Cp,)
+    off = abs_pos % bs
+    x = jnp.take(misc["embed"], tokens, axis=0)
+    for i, (kind, p) in enumerate(zip(kinds, layer_params)):
+        w = lm.layer_window(cfg, i)
+        h = L.apply_norm(cfg.norm, p["ln1"], x)
+        if cfg.mla is not None:
+            attn_out, pool_k = _chunk_mla_attention(
+                p["attn"], cfg, h, positions, pool_k, i, tables, blk, off,
+                pos0)
+        else:
+            attn_out, pool_k, pool_v = _chunk_gqa_attention(
+                p["attn"], cfg, h, positions, pool_k, pool_v, i, tables,
+                blk, off, pos0, window=w)
+        if cfg.parallel_block:
+            x = x + attn_out + L.mlp_apply(p["mlp"], cfg, h)
+            continue
+        x = x + attn_out
+        h2 = L.apply_norm(cfg.norm, p["ln2"], x)
+        if kind in ("moe", "mla_moe"):
+            y, _ = MO.moe_apply(p["moe"], cfg, h2, capacity_factor=-1.0)
+            x = x + y
+        else:
+            x = x + L.mlp_apply(p["mlp"], cfg, h2)
+    logits = lm.unembed(cfg, misc, x)
+    return logits[0], pool_k, pool_v
+
+
 def absorb_mla_decode_weights(cfg: ModelConfig, layer_params):
     """Precompute the absorbed MLA projection for the decode path.
 
@@ -281,6 +376,12 @@ class ModelExec:
         self._prefill_batch_jit = jax.jit(
             functools.partial(paged_prefill_batch, cfg, self.kinds),
             donate_argnums=(3, 4))
+        # chunked prefill specializes per (chunk bucket, table width bucket,
+        # level pytree) — both dims power-of-two bucketed by the engine, so
+        # the recompile set stays log-bounded like prompt/pool buckets.
+        self._prefill_chunk_jit = jax.jit(
+            functools.partial(paged_prefill_chunk, cfg, self.kinds),
+            donate_argnums=(4, 5))
 
     def _decode_params(self, layer_list):
         """Per-layer decode params; MLA absorbed weights hoisted + cached."""
@@ -311,3 +412,8 @@ class ModelExec:
         lp = tuple(p for _, p in layer_list)
         return self._prefill_batch_jit(self.misc, lp, tokens,
                                        pool_k, pool_v, tables, lens)
+
+    def prefill_chunk(self, layer_list, tokens, pos0, pool_k, pool_v, table):
+        lp = tuple(p for _, p in layer_list)
+        return self._prefill_chunk_jit(self.misc, lp, tokens, pos0,
+                                       pool_k, pool_v, table)

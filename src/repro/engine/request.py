@@ -8,6 +8,7 @@ from typing import List, Optional
 
 class RState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"        # holds a slot; prompt partially paged
     RUNNING = "running"
     PREEMPTED = "preempted"          # blocks freed; must re-prefill
     FINISHED = "finished"
@@ -20,9 +21,14 @@ class Request:
     prompt: List[int]                 # token ids
     max_new_tokens: int
     state: RState = RState.QUEUED
-    slot: int = -1                    # decode slot when RUNNING
+    slot: int = -1                    # decode slot when RUNNING/PREFILLING
     block_ids: List[int] = dataclasses.field(default_factory=list)
     generated: List[int] = dataclasses.field(default_factory=list)
+    # chunked prefill: prompt tokens already written to the paged KV pool.
+    # Preemption frees the blocks (recompute policy), so it resets to 0; the
+    # request resumes as a fresh PREFILLING admission.
+    prefill_pos: int = 0
+    prefill_chunks: int = 0           # chunk calls spent on the prompt
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
@@ -37,6 +43,10 @@ class Request:
     @property
     def context_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def prefill_remaining(self) -> int:
+        return len(self.prompt) - self.prefill_pos
 
     @property
     def done(self) -> bool:

@@ -102,3 +102,19 @@ def paged_decode_attention(q, k_new, v_new, k_pool, v_pool, block_tables,
                                         softcap=softcap, interpret=False)
     return pa.paged_gather_attention(q, k_pool, v_pool, block_tables, pos,
                                      window=window, softcap=softcap)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, pos0, *,
+                            window: int = 0, softcap: float = 0.0):
+    """Chunked-prefill attention: C queries at positions ``pos0 + i`` over
+    paged context (the chunk's own KV already scattered into the pool).
+
+    The engine's prefill chunks go through here, mirroring
+    ``paged_decode_attention`` for the decode hot path. All backends take
+    the gather path today — the pinned reference a future Pallas chunk
+    block-walk must reproduce bit-for-bit; its cost already tracks the
+    caller-bucketed table width, not ``max_blocks_per_seq``.
+    """
+    return pa.paged_chunk_gather_attention(q, k_pool, v_pool, block_tables,
+                                           pos0, window=window,
+                                           softcap=softcap)

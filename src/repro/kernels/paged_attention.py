@@ -194,6 +194,33 @@ def paged_attention_fused(q, k_new, v_new, k_pool, v_pool, block_tables,
 
 
 # ---------------------------------------------------------------------------
+# chunked-prefill attention: a chunk of queries over partially-paged context
+# ---------------------------------------------------------------------------
+def paged_chunk_gather_attention(q, k_pool, v_pool, block_tables, pos0, *,
+                                 window: int = 0, softcap: float = 0.0):
+    """Causal chunk attention against paged KV (gather path, all backends).
+
+    q: (B, C, H, Dh) — C consecutive queries at absolute positions
+    ``pos0 .. pos0 + C - 1``; the pool already holds the chunk's own KV
+    (appended by the caller at the block-table offset), so query i of the
+    chunk sees every pool position ``<= pos0 + i`` through the causal mask
+    — garbage beyond the chunk frontier sits at positions ``> pos0 + C - 1``
+    and is always masked. Cost is linear in ``block_tables.shape[1]``, which
+    the engine buckets to the power of two covering the chunk's end, so
+    prefill HBM traffic follows the *paged* context. A dedicated Pallas
+    block-walk for chunk prefill is the remaining TPU fast-path item; this
+    gather is the numerically-pinned reference it must match.
+    """
+    from repro.models.layers import naive_attention
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    gk = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    gv = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    return naive_attention(q, gk, gv, causal=True, q_offset=pos0,
+                           window=window, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
 # jnp fallback (CPU/GPU): gather over the *given* table width
 # ---------------------------------------------------------------------------
 def paged_gather_attention(q, k_pool, v_pool, block_tables, pos, *,

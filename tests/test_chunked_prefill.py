@@ -1,0 +1,237 @@
+"""Chunked prefill + token-budgeted continuous batching (ISSUE 4).
+
+Covers: bit-identity of chunked vs whole-prompt prefill (fp16, full-int4,
+MLA, and a forced swap-level crossing), preempt-during-prefill → resume,
+decode progress during prompt bursts (no decode-free step while a prefill
+backlog exists), and the controller's chunk-budget actuator.
+"""
+import jax
+import pytest
+
+from repro.configs import ServingConfig, reduced, MORPH_LLAMA2_7B, ASSIGNED
+from repro.core import tree_bytes
+from repro.engine import (EngineConfig, MorphServeEngine, TraceRequest,
+                          burstgpt_like)
+from repro.engine.kv_cache import kv_block_bytes
+from repro.engine.request import RState
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(cfg, params, *, blocks=40, policy="static_fp16",
+                mode="performance", slots=4, seed=7, **ecfg_kw):
+    wb = tree_bytes(params)
+    bb = kv_block_bytes(cfg, 16, 4)
+    budget = int((wb + blocks * bb) / 0.95) + 2 * bb
+    sc = ServingConfig(hbm_budget_bytes=budget, kv_block_size=16,
+                       max_batch_slots=slots, max_seq_len=256,
+                       swap_levels=(0, 1, 2, 4), mode=mode,
+                       kv_resize_step_frac=0.25)
+    return MorphServeEngine(cfg, params, sc,
+                            EngineConfig(policy=policy, compute="real",
+                                         seed=seed, **ecfg_kw))
+
+
+def _run_to_completion(eng, trace, max_steps=4000):
+    rep = eng.run_trace(trace, max_steps=max_steps)
+    return rep, [r.generated for r in eng.all_requests]
+
+
+# --------------------------------------------------------------------------
+# token identity: chunked == whole-prompt, bit for bit
+# --------------------------------------------------------------------------
+def test_chunked_prefill_token_identity_fp16(model):
+    """A prompt longer than the step budget streams through in chunks and
+    must produce the exact token stream of the whole-prompt path, while a
+    short request decodes beside it."""
+    cfg, params = model
+    trace = [TraceRequest(0.0, 70, 6), TraceRequest(0.0, 20, 12)]
+    eng_w = make_engine(cfg, params, max_tokens_per_step=256)
+    _, toks_w = _run_to_completion(eng_w, trace)
+    eng_c = make_engine(cfg, params, max_tokens_per_step=24)
+    _, toks_c = _run_to_completion(eng_c, trace)
+    long_req = eng_c.all_requests[0]
+    assert long_req.prefill_chunks >= 2, "budget 24 < prompt 70 must chunk"
+    assert eng_w.all_requests[0].prefill_chunks <= 1
+    assert toks_w == toks_c, "chunked prefill must be bit-transparent"
+    # mixed steps actually happened: decode advanced beside prompt chunks
+    assert any(t.decode_tokens and t.prefill_tokens
+               for t in eng_c.monitor.history)
+
+
+def test_chunked_prefill_token_identity_int4(model):
+    """Chunk attention over fully-quantized (QTensor) layers — the swapped-
+    level data plane — is also bit-transparent."""
+    cfg, params = model
+    trace = [TraceRequest(0.0, 70, 6)]
+    eng_w = make_engine(cfg, params, policy="static_int4",
+                        max_tokens_per_step=256)
+    _, toks_w = _run_to_completion(eng_w, trace)
+    eng_c = make_engine(cfg, params, policy="static_int4",
+                        max_tokens_per_step=24)
+    _, toks_c = _run_to_completion(eng_c, trace)
+    assert eng_c.all_requests[0].prefill_chunks >= 2
+    assert toks_w == toks_c
+
+
+def test_chunked_prefill_token_identity_across_swap_levels(model):
+    """A morph trace crossing swap levels: the level schedule is forced at
+    fixed generated-token boundaries (pressure morphing disabled) so both
+    runs see identical weights per token; streams must match bitwise."""
+    cfg, params = model
+
+    def run(mts):
+        eng = make_engine(cfg, params, policy="morph", max_tokens_per_step=mts)
+        eng.controller.decide = lambda sig: None     # manual level control
+        r = eng.submit(TraceRequest(0.0, 64, 8))
+        sched = [(1, 2), (4, 0)]     # after N tokens -> level
+        applied = set()
+        for _ in range(2000):
+            if r.state == RState.FINISHED:
+                break
+            eng.step()
+            for n, lvl in sched:
+                if len(r.generated) >= n and n not in applied:
+                    applied.add(n)
+                    eng.actuator.issue(lvl, eng.now)
+                    eng.actuator.poll(eng.now + 1e9)   # land instantly
+        assert r.state == RState.FINISHED
+        return r
+
+    r_w = run(256)
+    r_c = run(16)
+    assert r_c.prefill_chunks >= 2
+    assert max(r_c.token_levels) > 0, "trace never crossed a swap level"
+    assert r_w.token_levels == r_c.token_levels
+    assert r_w.generated == r_c.generated
+
+
+def test_chunked_prefill_mla(model):
+    """MLA latent-pool chunk path matches whole-prompt prefill."""
+    cfg = reduced(ASSIGNED["deepseek-v3-671b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    trace = [TraceRequest(0.0, 40, 4)]
+    eng_w = make_engine(cfg, params, blocks=30, max_tokens_per_step=256)
+    _, toks_w = _run_to_completion(eng_w, trace, max_steps=2000)
+    eng_c = make_engine(cfg, params, blocks=30, max_tokens_per_step=16)
+    _, toks_c = _run_to_completion(eng_c, trace, max_steps=2000)
+    assert eng_c.all_requests[0].prefill_chunks >= 2
+    assert toks_w == toks_c
+
+
+# --------------------------------------------------------------------------
+# preemption mid-prefill
+# --------------------------------------------------------------------------
+def test_preempt_during_prefill_resume(model):
+    """A request preempted partway through its chunked prefill restarts from
+    scratch (recompute policy), resumes, and completes with the exact output
+    of an undisturbed run."""
+    cfg, params = model
+    trace = [TraceRequest(0.0, 48, 5)]
+    eng_ref = make_engine(cfg, params, max_tokens_per_step=256)
+    _, toks_ref = _run_to_completion(eng_ref, trace)
+
+    eng = make_engine(cfg, params, max_tokens_per_step=16)
+    r = eng.submit(TraceRequest(0.0, 48, 5))
+    for _ in range(100):
+        if r.state == RState.PREFILLING and 0 < r.prefill_pos < r.prompt_len:
+            break
+        eng.step()
+    assert r.state == RState.PREFILLING and r.prefill_pos > 0
+    eng._preempt(r)
+    assert r.state == RState.PREEMPTED
+    assert r.prefill_pos == 0 and not r.block_ids
+    for _ in range(2000):
+        if r.state == RState.FINISHED:
+            break
+        eng.step()
+    assert r.state == RState.FINISHED
+    assert r.preemptions == 1
+    assert r.generated == toks_ref[0]
+    assert eng.pool.alloc.n_used == 0
+
+
+def test_prefilling_request_is_preemption_victim(model):
+    """Under block exhaustion the youngest slot occupant is evicted even if
+    it is mid-prefill — decode of older requests keeps its memory."""
+    cfg, params = model
+    eng = make_engine(cfg, params, blocks=8, max_tokens_per_step=16, slots=4)
+    # two long requests that cannot both hold blocks to completion
+    trace = [TraceRequest(0.0, 40, 40), TraceRequest(0.0, 40, 40)]
+    rep = eng.run_trace(trace, max_steps=4000)
+    assert rep.n_finished == 2
+    assert rep.preemptions >= 1
+    assert eng.pool.alloc.n_used == 0
+
+
+# --------------------------------------------------------------------------
+# decode never stalls behind prompt bursts (sim, paper scale)
+# --------------------------------------------------------------------------
+def test_no_decode_free_steps_during_burst():
+    """With the budget below the longest prompt, every step taken while a
+    prefill backlog exists still advances every live decode (or preempts
+    it) — the head-of-line-blocking failure mode is gone. Counted by the
+    engine's own decode_stall_steps/mixed_steps invariant counters (the
+    same ones CI's serving smoke gates on)."""
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=32, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8), mode="performance")
+    eng = MorphServeEngine(MORPH_LLAMA2_7B, None, sc,
+                           EngineConfig(policy="morph", compute="sim",
+                                        seed=1, max_tokens_per_step=128))
+    trace = burstgpt_like(duration_s=10.0, base_rps=2.0, seed=3,
+                          prompt_mean=512, gen_mean=128,
+                          prompt_max=1024, gen_max=256)
+    assert max(t.prompt_len for t in trace) > 128
+    eng.run_trace(trace, max_steps=20000)
+    assert eng._n_live == 0, "trace did not drain"
+    assert eng.decode_stall_steps == 0
+    assert eng.mixed_steps > 0, "decode never ran beside prompt chunks"
+    chunked = [r for r in eng.all_requests if r.prefill_chunks >= 2]
+    assert chunked, "burst trace never exercised chunked prefill"
+
+
+# --------------------------------------------------------------------------
+# chunk budget as the controller's third actuator
+# --------------------------------------------------------------------------
+def test_chunk_budget_actuator(model):
+    cfg, params = model
+    eng = make_engine(cfg, params, policy="morph", mode="performance",
+                      max_tokens_per_step=256, min_chunk_tokens=32)
+    assert eng.chunk_budget == 256
+    # sustained high pressure: budget halves down to the floor
+    eng.monitor.kv_usage = 0.99
+    for _ in range(6):
+        eng._morph_tick()
+    assert eng.chunk_budget == 32
+    assert eng.chunk_log and eng.chunk_log[-1][1] == 32
+    # drain: budget restores to the configured maximum (even at level 0)
+    eng.actuator._inflight = None
+    eng.actuator.level = 0
+    eng.controller.commit(0)
+    eng.monitor.kv_usage = 0.0
+    eng.monitor.queue_len = 0.0
+    for _ in range(6):
+        eng._morph_tick()
+    assert eng.chunk_budget == 256
+
+
+def test_budget_reserves_decode_tokens_first(model):
+    """The prefill share of a step is the budget minus live decodes."""
+    cfg, params = model
+    eng = make_engine(cfg, params, max_tokens_per_step=8)
+    eng.submit(TraceRequest(0.0, 10, 20))
+    eng.step()                                  # whole-prompt admit (10 > 8?)
+    # prompt 10 > budget 8 -> chunked; after some steps it decodes
+    for _ in range(50):
+        if eng.decoding:
+            break
+        eng.step()
+    assert eng.decoding
+    assert eng._prefill_token_budget() == 8 - len(eng.decoding)
