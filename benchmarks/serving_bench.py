@@ -1,20 +1,24 @@
-"""End-to-end serving smoke: bursty trace replay, morph-on vs morph-off.
+"""End-to-end serving smoke: trace replay across policies and cache modes.
 
-Replays a short ``burstgpt_like`` trace in simulated compute (virtual L4
-clock, paper-scale model) through the token-budgeted step loop with
-``max_tokens_per_step`` set **below the longest prompt**, so long prompts
-stream through the paged pool in chunks while decodes keep stepping.
-Two policies share the trace:
+Two scenario families share the engine (simulated compute, virtual L4
+clock, paper-scale model):
 
-  * ``morph_on``  — the paper's system (performance mode: layer swapping,
-                    KV resizing, chunk-budget actuator)
-  * ``morph_off`` — ``static_fp16`` baseline (same engine, morphing off)
+* **burst** — a ``burstgpt_like`` trace with burst episodes above capacity
+  and calm stretches between them (the paper's transient-pressure regime),
+  replayed morph-on vs morph-off with ``max_tokens_per_step`` **below the
+  longest prompt** so long prompts stream through the paged pool in chunks
+  while decodes keep stepping. Gates: morph-on p95 TTFT no worse, zero
+  decode-free steps with a prefill backlog, chunking engaged, and — the
+  paper's transient-degradation claim — ``degraded_token_frac`` receding
+  after bursts instead of ratcheting to ~1.0 (the pre-fix controller
+  wedged at max swap level because restores required a pool shrink whose
+  free tail long decodes never released).
 
-Emits ``BENCH_serving.json`` with ttft_p95 / slo_violation_rate /
-degraded_token_frac per policy plus the chunked-prefill liveness counters
-CI gates on: morph-on ttft_p95 <= morph-off ttft_p95, and zero decode-free
-steps while a prefill backlog existed (decode never head-of-line blocks
-behind a prompt burst).
+* **shared_prefix** — a multi-turn trace where every prompt shares a
+  system prompt and each turn extends the conversation so far, replayed
+  with the paged prefix cache on vs off (morph policy both times).
+  Gates: >50% prefill-token savings, hit rate above threshold, p95 TTFT
+  no worse than cache-off, identical generated-token counts.
 
 ``PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke]``
 """
@@ -25,31 +29,53 @@ import json
 
 from repro.configs import ServingConfig, MORPH_LLAMA2_7B
 from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
-                          burstgpt_like)
+                          burstgpt_like, shared_prefix_multiturn)
 
 MAX_TOKENS_PER_STEP = 256
 
 
 def make_trace(duration_s: float):
-    return burstgpt_like(duration_s=duration_s, base_rps=1.2, seed=5,
+    # base 0.5 rps: burst episodes exceed capacity (pressure spikes, the
+    # controller escalates) but the base load drains between them, so
+    # degradation must be transient — with this seed the 18-36 s window
+    # carries much heavier bursts, so the full (36 s) run is a harder leg
+    # than the smoke one. At the old 1.2 rps the trace was ~2.7x sustained
+    # overload, where near-total degradation is the *correct* outcome — no
+    # use as a transient-degradation regression gate.
+    return burstgpt_like(duration_s=duration_s, base_rps=0.5, seed=5,
                          prompt_mean=512, gen_mean=192,
                          prompt_max=1024, gen_max=384)
 
 
-def run_policy(policy: str, trace, *, max_steps: int = 60000):
-    """Replay ``trace``; returns (engine, report). Decode liveness is read
-    off the engine's own ``decode_stall_steps`` / ``mixed_steps`` counters
-    (a stall = a request that was decoding at step start produced no token
-    and was not evicted while prefill ran beside it)."""
+def make_prefix_trace(duration_s: float):
+    return shared_prefix_multiturn(duration_s=duration_s,
+                                   n_conversations=max(int(duration_s / 2), 4),
+                                   turns_per_conv=4, system_len=256,
+                                   conv_header_len=128, turn_len=64,
+                                   tail_max=96, gen_mean=48,
+                                   vocab=MORPH_LLAMA2_7B.vocab, seed=7)
+
+
+def make_engine(policy: str, *, prefix_caching: bool = False):
     sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
                        max_batch_slots=48, max_seq_len=2048,
                        swap_levels=(0, 2, 4, 8, 16), mode="performance",
                        kv_resize_step_frac=0.125)
-    eng = MorphServeEngine(MORPH_LLAMA2_7B, None, sc,
-                           EngineConfig(policy=policy, compute="sim",
-                                        hw=NVIDIA_L4, dtype="bfloat16",
-                                        seed=1,
-                                        max_tokens_per_step=MAX_TOKENS_PER_STEP))
+    return MorphServeEngine(MORPH_LLAMA2_7B, None, sc,
+                            EngineConfig(policy=policy, compute="sim",
+                                         hw=NVIDIA_L4, dtype="bfloat16",
+                                         seed=1,
+                                         max_tokens_per_step=MAX_TOKENS_PER_STEP,
+                                         prefix_caching=prefix_caching))
+
+
+def run_policy(policy: str, trace, *, prefix_caching: bool = False,
+               max_steps: int = 60000):
+    """Replay ``trace``; returns (engine, report). Decode liveness is read
+    off the engine's own ``decode_stall_steps`` / ``mixed_steps`` counters
+    (a stall = a request that was decoding at step start produced no token
+    and was not evicted while prefill ran beside it)."""
+    eng = make_engine(policy, prefix_caching=prefix_caching)
     rep = eng.run_trace(trace, max_steps=max_steps)
     return eng, rep
 
@@ -64,14 +90,27 @@ def leg_stats(eng, rep):
         "preemptions": rep.preemptions,
         "n_requests": rep.n_requests,
         "n_finished": rep.n_finished,
+        "n_failed": rep.n_failed,
+        # preemption-invariant output check: the recompute policy folds
+        # generated tokens into the prompt, so prompt_len + len(generated)
+        # is conserved per finished request regardless of preempt history
+        # (len(generated) alone is not)
+        "context_tokens": sum(r.prompt_len + len(r.generated)
+                              for r in eng.all_requests),
         "decode_free_steps_with_backlog": eng.decode_stall_steps,
         "mixed_steps": eng.mixed_steps,
         "chunked_requests": sum(1 for r in eng.all_requests
                                 if r.prefill_chunks >= 2),
         "max_swap_level": max((t.swap_level for t in eng.monitor.history),
                               default=0),
+        "final_swap_level": (eng.monitor.history[-1].swap_level
+                             if eng.monitor.history else 0),
         "min_chunk_budget": min((t.chunk_budget for t in eng.monitor.history),
                                 default=MAX_TOKENS_PER_STEP),
+        "prefix_hit_rate": rep.prefix_hit_rate,
+        "prefill_tokens_saved": rep.prefill_tokens_saved,
+        "prefix_evicted_for_pressure": eng.prefix_evicted_for_pressure,
+        "compaction_moves": eng.compaction_moves,
     }
 
 
@@ -104,13 +143,50 @@ def main(smoke: bool = False) -> dict:
             and off["decode_free_steps_with_backlog"] == 0),
         "chunking_engaged": bool(on["chunked_requests"] > 0
                                  and off["chunked_requests"] > 0),
+        # transient-degradation claim: the controller must restore after
+        # bursts (pre-fix this sat at ~0.995 with the level wedged at max)
+        "degradation_transient": bool(
+            on["degraded_token_frac"] < 0.75
+            and on["final_swap_level"] == 0
+            and on["slo_violation_rate"] <= off["slo_violation_rate"]),
     }
+
+    # --- shared-prefix legs: prefix cache on vs off ----------------------
+    ptrace = make_prefix_trace(duration)
+    total_prompt = sum(t.prompt_len for t in ptrace)
+    out["prefix_trace"] = {"kind": "shared_prefix_multiturn",
+                           "duration_s": duration,
+                           "n_requests": len(ptrace),
+                           "total_prompt_tokens": total_prompt}
+    for key, cached in (("prefix_cache_on", True), ("prefix_cache_off", False)):
+        eng, rep = run_policy("morph", ptrace, prefix_caching=cached)
+        if eng.prefix_cache is not None:       # invariants after full replay
+            eng.prefix_cache.check(eng.pool.alloc)
+        out[key] = leg_stats(eng, rep)
+        s = out[key]
+        print(f"{key},{s['ttft_p95']:.3f},{s['slo_violation_rate']:.2%},"
+              f"{s['degraded_token_frac']:.2%},{s['throughput_tok_s']:.0f},"
+              f"{s['preemptions']},hit={s['prefix_hit_rate']:.2%},"
+              f"saved={s['prefill_tokens_saved']}")
+    pon, poff = out["prefix_cache_on"], out["prefix_cache_off"]
+    savings = pon["prefill_tokens_saved"] / max(total_prompt, 1)
+    out["gates"].update({
+        "prefix_savings_frac": savings,
+        "prefix_savings_over_half": bool(savings > 0.5),
+        "prefix_hit_rate_ok": bool(pon["prefix_hit_rate"] > 0.5),
+        "prefix_ttft_no_worse": bool(pon["ttft_p95"] <= poff["ttft_p95"]),
+        "prefix_identical_generated": bool(
+            pon["context_tokens"] == poff["context_tokens"]),
+    })
     with open("BENCH_serving.json", "w") as f:
         json.dump(out, f, indent=2)
-    print(f"# ttft_p95 morph-on/off = {out['gates']['ttft_p95_ratio']:.2f}x "
-          f"(gate: <= 1.0); slo_viol {on['slo_violation_rate']:.2%} vs "
-          f"{off['slo_violation_rate']:.2%}; degraded_tok "
-          f"{on['degraded_token_frac']:.2%}; wrote BENCH_serving.json")
+    g = out["gates"]
+    print(f"# ttft_p95 morph-on/off = {g['ttft_p95_ratio']:.2f}x "
+          f"(gate: <= 1.0); degraded_tok {on['degraded_token_frac']:.2%} "
+          f"(transient gate: < 0.75, final level "
+          f"{on['final_swap_level']}); prefix savings {savings:.2%} "
+          f"(gate: > 0.5), hit rate {pon['prefix_hit_rate']:.2%}; "
+          f"wrote BENCH_serving.json")
     return out
 
 

@@ -175,6 +175,12 @@ class ServingConfig:
     acc_max_level_frac: float = 0.5
     # KV resize buckets (fractions of baseline pool growable)
     kv_resize_step_frac: float = 0.125
+    # restore hysteresis: with no high-pressure event for this long, step the
+    # swap level back down even if kv usage sits in the [low, high) dead band
+    # (a grown pool parks usage there after a burst, which used to wedge the
+    # level at max for the rest of the trace — the paper's degradation is
+    # transient, so calm alone must be enough to begin restoring)
+    restore_patience_s: float = 1.0
 
     def max_level(self, n_layers: int) -> int:
         frac = (self.perf_max_level_frac if self.mode == "performance"

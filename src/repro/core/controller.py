@@ -45,6 +45,14 @@ class MorphingController:
         self._levels = [l for l in plan.levels if l <= max_lvl]
         if not self._levels:
             self._levels = [0]
+        # last time the pressure signal read HIGH (restore hysteresis clock;
+        # re-armed on every calm-driven restore so the level steps down one
+        # bucket per patience window, not all at once)
+        self._last_high_s = 0.0
+        # escalation pacing: at most one level-up per monitor window, so a
+        # single transient queue-delay blip can't ratchet 0 -> max in a few
+        # consecutive 10ms steps before the EWMA even reacts
+        self._last_escalate_s = float("-inf")
 
     # ------------------------------------------------------------------
     def _next_up(self, level: int) -> int:
@@ -62,28 +70,44 @@ class MorphingController:
     def decide(self, signals: Dict[str, float]) -> Optional[MorphCommand]:
         kv = signals.get("kv_usage", 0.0)
         qd = signals.get("queue_delay", 0.0)
+        now = signals.get("time_s", 0.0)
         high = kv > self.high_watermark() or qd > self.sc.queue_delay_high_s
         low = (kv < self.sc.kv_pressure_low
                and signals.get("queue_len", 0.0) < 0.5)
         if high:
+            self._last_high_s = now
             nxt = self._next_up(self.level)
-            if nxt != self.level:
+            if nxt != self.level \
+                    and now - self._last_escalate_s >= self.sc.monitor_window_s:
+                self._last_escalate_s = now
                 why = (f"kv_usage={kv:.2f}" if kv > self.high_watermark()
                        else f"queue_delay={qd * 1e3:.0f}ms")
                 return MorphCommand(target_level=nxt, grow_kv=True,
                                     shrink_chunk=True,
                                     reason=f"pressure high ({why})")
-            # already at max level — still grant KV growth if possible
+            # at max level (or pacing the next step) — still grant KV growth
             return MorphCommand(target_level=self.level, grow_kv=True,
                                 shrink_chunk=True,
                                 reason="pressure high (at max level)")
-        if low:
+        # restore on explicit LOW, or once pressure has stayed out of HIGH
+        # for a full patience window ("calm"). The dead band alone used to
+        # wedge the level: after a burst the grown pool parks kv_usage in
+        # [low, high) indefinitely, and degradation — transient in the
+        # paper — never receded. Calm restores re-arm the clock so the
+        # level walks down one bucket per window and re-escalates freely
+        # if the next burst hits.
+        calm = (self.sc.restore_patience_s > 0
+                and now - self._last_high_s >= self.sc.restore_patience_s)
+        if low or calm:
             if self.level > 0:
                 nxt = self._next_down(self.level)
-                return MorphCommand(target_level=nxt, shrink_kv=True,
+                if not low:
+                    self._last_high_s = now       # pace calm: one step/window
+                return MorphCommand(target_level=nxt, shrink_kv=low,
                                     grow_chunk=True,
-                                    reason=f"pressure low (kv_usage={kv:.2f})")
-            if signals.get("chunk_budget_frac", 1.0) < 1.0:
+                                    reason=(f"pressure low (kv_usage={kv:.2f})"
+                                            if low else "calm (restore)"))
+            if low and signals.get("chunk_budget_frac", 1.0) < 1.0:
                 # already at fp16 — only the admission budget is left to
                 # restore (no level move, no KV command)
                 return MorphCommand(target_level=0, grow_chunk=True,

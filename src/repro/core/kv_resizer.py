@@ -58,6 +58,20 @@ class KVResizer:
             return ResizeDecision(target, f"shrink to {target}")
         return None
 
+    def clamp_to_tail(self, new_blocks: int, tail_blocks: int) -> int:
+        """Partial-shrink support: the allocator can only drop a free tail,
+        so lift ``new_blocks`` to the smallest bucketed size >= the live
+        tail. A restore blocked on a full shrink-to-fit used to wedge the
+        swap level at max for the rest of a trace (long decodes holding
+        high block ids kept the tail busy); clamped targets let repeated
+        ticks walk the pool down as the tail frees."""
+        if new_blocks >= tail_blocks:
+            return new_blocks
+        b = self._bucket(tail_blocks)
+        while b < tail_blocks:
+            b += self.step
+        return b
+
     def fits_restore(self, *, weight_bytes_restored: int) -> bool:
         """Can the current pool coexist with restored (larger) weights?"""
         return (self.ledger.max_kv_blocks(weight_bytes_restored)

@@ -31,6 +31,9 @@ class Telemetry:
     prefill_tokens: int = 0
     prefill_backlog_tokens: int = 0
     chunk_budget: int = 0
+    # shared-prefix cache residency (blocks counted in kv_used_blocks that
+    # are idle cached prefixes, reclaimable on demand)
+    prefix_cached_blocks: int = 0
 
     @property
     def kv_usage(self) -> float:

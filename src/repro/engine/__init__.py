@@ -1,8 +1,10 @@
 from repro.engine.engine import MorphServeEngine, EngineConfig
-from repro.engine.kv_cache import PagedKVPool, BlockAllocator, kv_block_bytes
+from repro.engine.kv_cache import (PagedKVPool, BlockAllocator, PrefixCache,
+                                   kv_block_bytes)
 from repro.engine.cost_model import (CostModel, HardwareProfile, NVIDIA_L4,
                                      NVIDIA_A100_80G, TPU_V5E, PROFILES)
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import Request, RState
 from repro.engine.traces import (TraceRequest, azure_like, burstgpt_like,
-                                 constant_rate, TRACES)
+                                 constant_rate, shared_prefix_multiturn,
+                                 TRACES)

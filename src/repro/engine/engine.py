@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -28,7 +29,7 @@ from repro.core import (MemoryLedger, MorphingActuator, MorphingController,
                         front_to_back_order)
 from repro.engine import model_exec
 from repro.engine.cost_model import CostModel, HardwareProfile, NVIDIA_L4
-from repro.engine.kv_cache import PagedKVPool, kv_block_bytes
+from repro.engine.kv_cache import PagedKVPool, PrefixCache, kv_block_bytes
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import Request, RState
 from repro.engine.traces import TraceRequest
@@ -72,6 +73,17 @@ class EngineConfig:
     # floor for the live budget when the morph controller shrinks it under
     # pressure (third actuator beside swap level and KV blocks)
     min_chunk_tokens: int = 32
+    # --- shared-prefix KV cache ------------------------------------------
+    # Hash block-aligned prompt prefixes (chained per-block hashes, swap
+    # level folded into every link) to refcounted pool blocks: admission
+    # seeds a hit's block table with the shared blocks copy-on-write and
+    # chunked prefill starts at the first uncached position; finished
+    # requests publish their full prompt blocks back instead of freeing
+    # them. Idle cached blocks are the engine's cheapest relief tier —
+    # reclaimed LRU before live-KV shrink, preemption, or a layer swap.
+    # Off by default: resident cached blocks change pool-occupancy
+    # dynamics, so workloads opt in (serving bench / shared-prefix traces).
+    prefix_caching: bool = False
 
 
 class MorphServeEngine:
@@ -176,7 +188,20 @@ class MorphServeEngine:
         self._next_rid = 0
         self._n_live = 0          # requests in QUEUED/PREFILLING/RUNNING/PREEMPTED
         self.rejected = 0
+        self.failed = 0           # terminal FAILED (unservable; incl. rejects)
         self.resize_log: List = []
+        # --- shared-prefix KV cache (attention/MLA archs only: SSM has no
+        # paged KV to share, and whole-prompt-only paths can't start a
+        # prefill at a nonzero offset) -----------------------------------
+        self.prefix_cache = (PrefixCache(bs)
+                             if ecfg.prefix_caching
+                             and cfg.family not in ("ssm",)
+                             and self._can_chunk() else None)
+        self.prefix_hit_requests = 0  # distinct requests with >= 1 hit
+        self._prefix_hit_rids: set = set()
+        self.prefill_tokens_saved = 0
+        self.prefix_evicted_for_pressure = 0
+        self.compaction_moves = 0     # blocks migrated out of doomed tails
         # live per-step token budget (morph controller's third actuator:
         # shrunk toward min_chunk_tokens under pressure, restored on drain)
         self.chunk_budget = ecfg.max_tokens_per_step
@@ -192,18 +217,22 @@ class MorphServeEngine:
     # request admission / lifecycle
     # ------------------------------------------------------------------
     def submit(self, tr: TraceRequest) -> Request:
-        prompt = list(self.rng.integers(0, self.cfg.vocab,
-                                        size=tr.prompt_len))
+        if tr.prompt_tokens is not None:
+            prompt = list(tr.prompt_tokens)
+        else:
+            prompt = list(self.rng.integers(0, self.cfg.vocab,
+                                            size=tr.prompt_len))
         r = Request(self._next_rid, tr.arrival_s, prompt, tr.max_new_tokens)
         self._next_rid += 1
         self.all_requests.append(r)
         # reject requests that can never fit (block table or max-grown pool)
         theoretical_max = self.ledger.max_kv_blocks(
             self.plan.weight_bytes(self.plan.n_layers))
-        if self.pool.blocks_for(tr.prompt_len + tr.max_new_tokens + 1) \
+        if self.pool.blocks_for(len(prompt) + tr.max_new_tokens + 1) \
                 > min(self.max_nb, theoretical_max):
-            r.state = RState.FINISHED          # rejected; counts as violation
+            r.state = RState.FAILED       # terminal reject; always a violation
             self.rejected += 1
+            self.failed += 1
             return r
         self.queue.append(r)
         self._n_live += 1
@@ -243,12 +272,25 @@ class MorphServeEngine:
             return float("inf")
         return max(self.chunk_budget - len(self.decoding), 0)
 
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """Allocator alloc with prefix-cache relief: idle cached prefix
+        blocks are reclaimed LRU first (tier 0 — cheaper than preempting a
+        live sequence, shrinking live KV, or swapping a layer)."""
+        got = self.pool.alloc.alloc(n)
+        if got is not None or self.prefix_cache is None:
+            return got
+        freed = self.prefix_cache.evict_lru(n - self.pool.alloc.n_free)
+        if not freed:
+            return None
+        self.pool.alloc.release(freed)
+        return self.pool.alloc.alloc(n)
+
     def _grow_blocks(self, r: Request, need: int) -> bool:
         """Extend ``r``'s block table to ``need`` blocks, preempting only
         later-arrived (higher-rid) slot occupants under memory pressure.
         Returns False when ``r`` must stall this step instead."""
         while need > len(r.block_ids):
-            got = self.pool.alloc.alloc(1)
+            got = self._alloc_blocks(1)
             if got is None:
                 cands = [q for q in self.running if q.rid > r.rid]
                 if not cands:
@@ -290,14 +332,62 @@ class MorphServeEngine:
             r = self.queue[0]
             if r.arrival_s > self.now:
                 break
+            # a prompt whose decode-time block table can never fit is
+            # unservable — fail it terminally instead of parking it at the
+            # FIFO head forever and starving every later arrival (the
+            # oversized-prompt head-of-line wedge, ISSUE 5)
+            if self.pool.blocks_for(r.prompt_len + 1) > self.max_nb:
+                self.queue.popleft()
+                r.state = RState.FAILED
+                self._n_live -= 1
+                self.failed += 1
+                continue
             slot = self._free_slot()
             if slot is None:
                 break
-            if r.prompt_len <= budget or not self._can_chunk():
+            bs = self.pool.block_size
+            cached: List = []
+            if self.prefix_cache is not None and r.prompt_len > bs:
+                cached = self.prefix_cache.match(
+                    r.prompt, self.actuator.level,
+                    (r.prompt_len - 1) // bs, self.now)
+            if cached:
+                # seed the block table with the shared prefix copy-on-write
+                # (full blocks, read-only) and start the chunked prefill at
+                # the first uncached position
+                pos0 = len(cached) * bs
+                clen = int(min(budget, r.prompt_len - pos0))
+                target = pos0 + clen
+                need = self.pool.blocks_for(
+                    target + 1 if target == r.prompt_len else target)
+                extra = self._alloc_blocks(need - len(cached))
+                if extra is None:
+                    for e in cached:
+                        self.prefix_cache.release(e.block_id, self.now)
+                    break                               # memory pressure
+                self.queue.popleft()
+                r.slot = slot
+                r.block_ids = [e.block_id for e in cached] + extra
+                r.shared_blocks = len(cached)
+                r.state = RState.PREFILLING
+                r.prefill_pos = pos0
+                # shared blocks hold KV computed at the current level (the
+                # lookup key guarantees it) — record for republication
+                r.note_prefill_levels(0, pos0, self.actuator.level, bs)
+                self._slot_req[slot] = r
+                chunks.append((r, pos0, clen))
+                budget -= clen
+                # hit rate counts distinct requests (a preempted request
+                # re-admitted on a hit is still one request); tokens saved
+                # accrue per admission — every re-admission hit skips real
+                # prefill work again
+                if r.rid not in self._prefix_hit_rids:
+                    self._prefix_hit_rids.add(r.rid)
+                    self.prefix_hit_requests += 1
+                self.prefill_tokens_saved += pos0
+            elif r.prompt_len <= budget or not self._can_chunk():
                 nb = self.pool.blocks_for(r.prompt_len + 1)
-                if nb > self.max_nb:
-                    break
-                ids = self.pool.alloc.alloc(nb)
+                ids = self._alloc_blocks(nb)
                 if ids is None:
                     break                               # memory pressure
                 self.queue.popleft()
@@ -308,7 +398,7 @@ class MorphServeEngine:
                 budget -= r.prompt_len
             else:
                 clen = int(budget)
-                ids = self.pool.alloc.alloc(self.pool.blocks_for(clen))
+                ids = self._alloc_blocks(self.pool.blocks_for(clen))
                 if ids is None:
                     break
                 self.queue.popleft()
@@ -326,6 +416,8 @@ class MorphServeEngine:
         are assigned by ``step()`` once the unified step time is known.
         Returns the requests that produced their first token."""
         emitted: List[Request] = []
+        lvl = self.actuator.level
+        bs = self.pool.block_size
         if whole:
             if self.ec.compute == "real":
                 firsts = self._prefill_real_many(whole)
@@ -334,6 +426,7 @@ class MorphServeEngine:
                           for _ in whole]
             for r, first in zip(whole, firsts):
                 r.generated.append(first)
+                r.note_prefill_levels(0, r.prompt_len, lvl, bs)
                 emitted.append(r)
         for r, pos0, clen in chunks:
             if r.state != RState.PREFILLING:
@@ -343,6 +436,7 @@ class MorphServeEngine:
                 first = self._prefill_chunk_real(r, clen)
             r.prefill_pos += clen
             r.prefill_chunks += 1
+            r.note_prefill_levels(pos0, pos0 + clen, lvl, bs)
             if r.prefill_pos == r.prompt_len:
                 if first is None:               # sim compute
                     first = int(self.rng.integers(0, self.cfg.vocab))
@@ -427,7 +521,7 @@ class MorphServeEngine:
                 continue          # preempted by an earlier victim selection
             need = self.pool.blocks_for(r.context_len + 1)
             while need > len(r.block_ids):
-                got = self.pool.alloc.alloc(1)
+                got = self._alloc_blocks(1)
                 if got is None:
                     victim = max(self.running, key=lambda q: q.rid)
                     self._preempt(victim)
@@ -436,9 +530,55 @@ class MorphServeEngine:
                     continue
                 r.block_ids.extend(got)
 
+    def _release_blocks(self, r: Request, *, publish: bool) -> None:
+        """Return ``r``'s blocks. Shared prefix blocks drop a cache
+        reference (they stay resident); with ``publish``, the request's own
+        full prompt blocks are handed to the prefix cache instead of being
+        freed — extending the radix chain of the shared prefix — and only
+        the remainder (partial/decode blocks, duplicates, mixed-level
+        blocks) goes back to the allocator."""
+        ids, r.block_ids = r.block_ids, []
+        n_shared, r.shared_blocks = r.shared_blocks, 0
+        cache = self.prefix_cache
+        if cache is None:
+            self.pool.alloc.release(ids)
+            return
+        free: List[int] = []
+        for b in ids[:n_shared]:
+            if not cache.release(b, self.now):
+                free.append(b)               # defensive: not actually cached
+        published: set = set()
+        if publish:
+            bs = self.pool.block_size
+            levels = r.block_write_levels
+            n_full = min(r.prompt_len // bs, len(ids), len(levels))
+            lvl0 = levels[0] if n_full else None
+            prev_key = None
+            for i in range(n_full):
+                # lookups hash the whole chain at ONE level, so a chain is
+                # only reachable while the write level matches block 0's —
+                # publishing past the first level change (or a mixed/
+                # unwritten block) would squat on pool blocks nothing can
+                # ever match
+                if levels[i] != lvl0 or lvl0 is None or lvl0 < 0:
+                    break
+                key = cache.chain_key(prev_key, lvl0,
+                                      r.prompt[i * bs:(i + 1) * bs])
+                # shared blocks are already cached and just anchor the
+                # chain; private full prompt blocks extend it (a failed
+                # insert means a concurrent duplicate won — free ours)
+                if i >= n_shared and cache.insert(key, prev_key, ids[i],
+                                                  lvl0, self.now):
+                    published.add(i)
+                prev_key = key
+        free.extend(b for i, b in enumerate(ids)
+                    if i >= n_shared and i not in published)
+        self.pool.alloc.release(free)
+
     def _preempt(self, r: Request) -> None:
-        self.pool.alloc.release(r.block_ids)
-        r.block_ids = []
+        # no publish under pressure: retaining blocks is the opposite of
+        # relief, and a partial prefill may hold half-written blocks
+        self._release_blocks(r, publish=False)
         self._slot_req[r.slot] = None
         r.slot = -1
         r.state = RState.PREEMPTED
@@ -449,6 +589,7 @@ class MorphServeEngine:
         r.max_new_tokens -= len(r.generated)
         r.generated = []
         r.prefill_pos = 0
+        r.block_write_levels = []
         self.queue.appendleft(r)
 
     def _decode_real(self, run: List[Request]) -> None:
@@ -482,14 +623,90 @@ class MorphServeEngine:
         r.state = RState.FINISHED
         self._n_live -= 1
         r.finish_s = t
-        self.pool.alloc.release(r.block_ids)
-        r.block_ids = []
+        # full prompt blocks are published to the prefix cache (resident,
+        # refcounted, LRU-evictable) instead of freed
+        self._release_blocks(r, publish=True)
         self._slot_req[r.slot] = None
         r.slot = -1
 
     # ------------------------------------------------------------------
     # morphing control
     # ------------------------------------------------------------------
+    def _live_kv_blocks(self) -> int:
+        """Blocks held by live sequences — idle cached prefix blocks are
+        reclaimable on demand, so the resizer must not treat them as live."""
+        n = self.pool.alloc.n_used
+        if self.prefix_cache is not None:
+            n -= self.prefix_cache.evictable_blocks
+        return n
+
+    def _compact_tail(self, limit: int) -> bool:
+        """Migrate every allocated block with id >= ``limit`` into a free id
+        below it, rewriting live block tables and the prefix-cache index
+        (one device gather/scatter for the moved blocks in real compute).
+
+        Without this, an elastic shrink needs the pool tail to drain
+        naturally — but decodes admitted at the pressure peak hold high ids
+        until they finish, which wedged the restore path (and with it the
+        swap level) at max for the rest of a trace."""
+        alloc = self.pool.alloc
+        holders = [r for r in self._slot_req if r is not None]
+        cache = self.prefix_cache
+        doomed = set()
+        for r in holders:
+            doomed.update(b for b in r.block_ids if b >= limit)
+        if cache is not None:
+            doomed.update(b for b in cache.by_block if b >= limit)
+        if not doomed:
+            return True
+        free_low = sorted(b for b in alloc.free if b < limit)
+        if len(free_low) < len(doomed):
+            return False                     # not enough room below the cut
+        src = sorted(doomed)
+        mapping = dict(zip(src, free_low))
+        for r in holders:
+            r.block_ids = [mapping.get(b, b) for b in r.block_ids]
+        if cache is not None:
+            moved = [e for e in cache.by_block.values()
+                     if e.block_id in mapping]
+            for e in moved:
+                del cache.by_block[e.block_id]
+                e.block_id = mapping[e.block_id]
+                cache.by_block[e.block_id] = e
+        taken = set(free_low[:len(src)])
+        alloc.free = [b for b in alloc.free if b not in taken] + src
+        heapq.heapify(alloc.free)
+        if self.ec.compute == "real":
+            si = jnp.array(src, jnp.int32)
+            di = jnp.array([mapping[b] for b in src], jnp.int32)
+            self.pool.k = self.pool.k.at[:, di].set(self.pool.k[:, si])
+            if self.cfg.mla is None and self.pool.v.ndim > 1:
+                self.pool.v = self.pool.v.at[:, di].set(self.pool.v[:, si])
+        self.compaction_moves += len(src)
+        return True
+
+    def _shrink_pool(self, new_blocks: int) -> Optional[int]:
+        """Pool shrink with tier ordering: idle cached prefixes squatting on
+        the doomed tail are evicted first, live blocks up there are
+        compacted below the cut (or, failing that, clamp the target to a
+        *partial* shrink) instead of wedging the shrink entirely. Returns
+        the logical block count actually applied, or None when no shrink
+        was possible this tick."""
+        if self.prefix_cache is not None:
+            freed = self.prefix_cache.evict_block_ids_at_or_above(
+                new_blocks + 1)
+            if freed:
+                self.pool.alloc.release(freed)
+        if self.pool.alloc.shrinkable_to() > new_blocks + 1:
+            self._compact_tail(new_blocks + 1)
+        new_blocks = self.resizer.clamp_to_tail(
+            new_blocks, self.pool.alloc.shrinkable_to() - 1)
+        if new_blocks >= self.ledger.kv_blocks:
+            return None
+        if not self.pool.resize(new_blocks + 1):
+            return None
+        return new_blocks
+
     def _morph_tick(self) -> None:
         if self._pinned_level is not None:
             return
@@ -498,9 +715,28 @@ class MorphServeEngine:
             self.controller.commit(self.actuator.level)
             self.ledger.set_weights(self.actuator.weight_bytes())
         sig = self.monitor.signals()
+        sig["time_s"] = self.now
         if self.ec.max_tokens_per_step > 0:
             sig["chunk_budget_frac"] = (self.chunk_budget
                                         / self.ec.max_tokens_per_step)
+        # tier 0 relief: under KV pressure, evict idle cached prefixes LRU
+        # down to the low watermark BEFORE the controller considers
+        # shrinking live KV or issuing a relief swap — reclaiming a cached
+        # block costs one future prefill at most, never a live sequence.
+        cap = max(self.pool.num_blocks - 1, 1)
+        if (self.prefix_cache is not None
+                and sig["kv_usage"] > self.controller.high_watermark()):
+            excess = (self.pool.alloc.n_used
+                      - int(cap * self.sc.kv_pressure_low))
+            if excess > 0:
+                freed = self.prefix_cache.evict_lru(excess)
+                if freed:
+                    self.pool.alloc.release(freed)
+                    self.prefix_evicted_for_pressure += len(freed)
+                    # reflect the relief immediately (the EWMA lags): only
+                    # residual pressure should escalate to tiers 2/3
+                    sig["kv_usage"] = min(sig["kv_usage"],
+                                          self.pool.alloc.n_used / cap)
         cmd = self.controller.decide(sig)
         # third actuator: the admission token budget reacts instantly (no
         # transfer latency). It backs off prefill pressure only while a
@@ -531,30 +767,36 @@ class MorphServeEngine:
             if tgt is not None:
                 wb_grow = max(wb_grow, self.plan.weight_bytes(tgt))
             dec = self.resizer.grow(weight_bytes=wb_grow,
-                                    live_blocks=self.pool.alloc.n_used)
+                                    live_blocks=self._live_kv_blocks())
             if dec is not None:
                 self.ledger.resize_kv(dec.new_blocks)
                 self.pool.resize(dec.new_blocks + 1)
                 self.resize_log.append((self.now, dec.new_blocks))
         if cmd.target_level < self.actuator.level and not self.actuator.busy:
-            # shrink pool first if the restored weights wouldn't fit
+            # shrink pool first if the restored weights wouldn't fit; a
+            # busy tail yields a partial shrink and the restore retries
+            # next tick as the tail frees (never wedges at max level)
             wb_restored = self.plan.weight_bytes(cmd.target_level)
             if not self.resizer.fits_restore(
                     weight_bytes_restored=wb_restored):
                 dec = self.resizer.shrink(
                     weight_bytes=wb_restored,
-                    live_blocks=self.pool.alloc.n_used)
-                if dec is not None and self.pool.resize(dec.new_blocks + 1):
-                    self.ledger.resize_kv(dec.new_blocks)
-                    self.resize_log.append((self.now, dec.new_blocks))
+                    live_blocks=self._live_kv_blocks())
+                if dec is not None:
+                    applied = self._shrink_pool(dec.new_blocks)
+                    if applied is not None:
+                        self.ledger.resize_kv(applied)
+                        self.resize_log.append((self.now, applied))
             if self.resizer.fits_restore(weight_bytes_restored=wb_restored):
                 self.actuator.issue(cmd.target_level, self.now)
         elif cmd.shrink_kv and self.actuator.level == 0:
             dec = self.resizer.shrink(weight_bytes=self.ledger.weight_bytes,
-                                      live_blocks=self.pool.alloc.n_used)
-            if dec is not None and self.pool.resize(dec.new_blocks + 1):
-                self.ledger.resize_kv(dec.new_blocks)
-                self.resize_log.append((self.now, dec.new_blocks))
+                                      live_blocks=self._live_kv_blocks())
+            if dec is not None:
+                applied = self._shrink_pool(dec.new_blocks)
+                if applied is not None:
+                    self.ledger.resize_kv(applied)
+                    self.resize_log.append((self.now, applied))
 
     # ------------------------------------------------------------------
     def step(self) -> float:
@@ -595,11 +837,20 @@ class MorphServeEngine:
             dt = 1e-3                                   # idle tick
         t = self.now + dt
         for r in emitted:
-            # prefill (whole or final chunk) emits the first token
-            r.first_token_s = t
+            # prefill (whole or final chunk) emits the first token — unless
+            # same-step memory pressure (_grow_blocks/_ensure_decode_blocks)
+            # preempted the request after it emitted: its token was folded
+            # back into the prompt for recompute, so stamping times/levels
+            # or recording TTFT here would log a phantom token
+            if r.state != RState.RUNNING:
+                continue
+            if r.first_token_s is None:
+                # a re-emission after preemption keeps the original TTFT
+                # (the first token really was delivered back then)
+                r.first_token_s = t
+                self.monitor.record_ttft(t - r.arrival_s)
             r.token_times.append(t)
             r.token_levels.append(lvl)
-            self.monitor.record_ttft(t - r.arrival_s)
         for r in dec:
             r.token_times.append(t)
             r.token_levels.append(lvl)
@@ -630,7 +881,9 @@ class MorphServeEngine:
             decode_tokens=len(dec),
             prefill_tokens=pf_tokens,
             prefill_backlog_tokens=backlog,
-            chunk_budget=self.chunk_budget))
+            chunk_budget=self.chunk_budget,
+            prefix_cached_blocks=(self.prefix_cache.resident_blocks
+                                  if self.prefix_cache is not None else 0)))
         self._morph_tick()
         return dt
 
@@ -659,5 +912,10 @@ class MorphServeEngine:
         for r in self.all_requests:
             for t in r.tpots():
                 self.monitor.record_tpot(t)
+        admitted = max(sum(1 for r in self.all_requests
+                           if r.state != RState.FAILED), 1)
         return build_report(self.all_requests, ttft_slo_s=self.sc.ttft_slo_s,
-                            duration_s=dur, history=self.monitor.history)
+                            duration_s=dur, history=self.monitor.history,
+                            prefix_hit_rate=self.prefix_hit_requests
+                            / admitted,
+                            prefill_tokens_saved=self.prefill_tokens_saved)

@@ -17,7 +17,7 @@ elasticity adapted to attention-free models (DESIGN.md §4).
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -188,6 +188,203 @@ class PagedKVPool:
             self.capacity = new_cap
             self.copies += 1
         return True
+
+
+class PrefixCacheEntry:
+    """One cached full KV block of a prompt prefix (radix-chain node)."""
+
+    __slots__ = ("key", "parent_key", "block_id", "ref", "children",
+                 "last_used", "level")
+
+    def __init__(self, key: int, parent_key: Optional[int], block_id: int,
+                 level: int, now: float):
+        self.key = key
+        self.parent_key = parent_key
+        self.block_id = block_id
+        self.level = level            # swap level the KV was computed under
+        self.ref = 0                  # live requests holding this block
+        self.children = 0             # cached entries chained off this one
+        self.last_used = now
+
+
+class PrefixCache:
+    """Refcounted shared-prefix KV block cache (radix-style chained hashes).
+
+    Full, block-aligned prompt prefixes are published here on request finish
+    instead of being freed: each block is keyed by the chained hash of
+    ``(parent_key, swap_level, block_tokens)``, so a lookup walks the chain
+    from block 0 and stops at the first miss — longest-prefix match. Folding
+    the *writer's* swap level into every link keeps reuse bit-transparent:
+    KV produced under a swapped (quantized) layer stack never serves a
+    request running at a different level.
+
+    Blocks with ``ref == 0`` stay resident but are the cheapest relief tier
+    in the engine: they are reclaimed LRU (leaf-first, so chains never dangle
+    unreachable interior nodes) before live-KV shrink, preemption, or a
+    quantized layer swap. ``ref > 0`` blocks are pinned — copy-on-write is
+    structural: only *full* prefix blocks are ever shared, so a holder's
+    writes (later prompt chunks, decode appends) always land in its own
+    private blocks past the shared boundary.
+    """
+
+    _SEED = 0x9E3779B97F4A7C15          # chain seed (any fixed odd constant)
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.entries: Dict[int, PrefixCacheEntry] = {}
+        self.by_block: Dict[int, PrefixCacheEntry] = {}
+        # counters (engine/bench observability)
+        self.lookups = 0
+        self.hits = 0
+        self.tokens_reused = 0
+        self.inserted_blocks = 0
+        self.evicted_blocks = 0
+
+    # -- chain keys ------------------------------------------------------
+    @classmethod
+    def chain_key(cls, prev_key: Optional[int], level: int,
+                  block_tokens: Sequence[int]) -> int:
+        """One chain link: the single place the key formula lives (lookup
+        and publish must agree bit-for-bit)."""
+        return hash((cls._SEED if prev_key is None else prev_key,
+                     level, tuple(block_tokens)))
+
+    def chain_keys(self, tokens: Sequence[int], level: int,
+                   n_blocks: int) -> List[int]:
+        """Chained hashes of the first ``n_blocks`` full blocks."""
+        bs = self.block_size
+        keys: List[int] = []
+        h: Optional[int] = None
+        for b in range(n_blocks):
+            h = self.chain_key(h, level, tokens[b * bs:(b + 1) * bs])
+            keys.append(h)
+        return keys
+
+    # -- stats -----------------------------------------------------------
+    @property
+    def resident_blocks(self) -> int:
+        return len(self.entries)
+
+    @property
+    def evictable_blocks(self) -> int:
+        return sum(1 for e in self.entries.values() if e.ref == 0)
+
+    # -- lookup / pinning ------------------------------------------------
+    def match(self, tokens: Sequence[int], level: int, max_blocks: int,
+              now: float) -> List[PrefixCacheEntry]:
+        """Longest cached block-aligned prefix of ``tokens`` at ``level``.
+
+        Matched entries are pinned (ref++) and LRU-touched; the caller owns
+        the references and must hand every block back through ``release``.
+        """
+        self.lookups += 1
+        matched: List[PrefixCacheEntry] = []
+        for key in self.chain_keys(tokens, level, max_blocks):
+            e = self.entries.get(key)
+            if e is None:
+                break
+            matched.append(e)
+        for e in matched:
+            e.ref += 1
+            e.last_used = now
+        if matched:
+            self.hits += 1
+            self.tokens_reused += len(matched) * self.block_size
+        return matched
+
+    def release(self, block_id: int, now: float) -> bool:
+        """Drop one reference to a cached block. Returns True when the block
+        belongs to the cache (the caller must NOT free it to the allocator);
+        False means the block is not cached and stays caller-owned."""
+        e = self.by_block.get(block_id)
+        if e is None:
+            return False
+        assert e.ref > 0, f"release of unpinned cached block {block_id}"
+        e.ref -= 1
+        e.last_used = now
+        return True
+
+    # -- publish ---------------------------------------------------------
+    def insert(self, key: int, parent_key: Optional[int], block_id: int,
+               level: int, now: float) -> bool:
+        """Publish a finished request's private full block. Returns True
+        when the cache took ownership (resident at ref 0); False when the
+        key or block is already cached — the caller keeps/frees the block."""
+        if key in self.entries or block_id in self.by_block:
+            return False
+        if parent_key is not None and parent_key not in self.entries:
+            return False                      # chain broken: parent evicted
+        e = PrefixCacheEntry(key, parent_key, block_id, level, now)
+        self.entries[key] = e
+        self.by_block[block_id] = e
+        if parent_key is not None:
+            self.entries[parent_key].children += 1
+        self.inserted_blocks += 1
+        return True
+
+    # -- eviction (tier-1 relief) ----------------------------------------
+    def _drop(self, e: PrefixCacheEntry) -> int:
+        del self.entries[e.key]
+        del self.by_block[e.block_id]
+        if e.parent_key is not None:
+            parent = self.entries.get(e.parent_key)
+            if parent is not None:
+                parent.children -= 1
+        self.evicted_blocks += 1
+        return e.block_id
+
+    def evict_lru(self, n: int) -> List[int]:
+        """Reclaim up to ``n`` idle cached blocks, least-recently-used leaves
+        first. Returns the freed block ids (caller releases to allocator)."""
+        freed: List[int] = []
+        heap = [(e.last_used, e.key) for e in self.entries.values()
+                if e.ref == 0 and e.children == 0]
+        heapq.heapify(heap)
+        while heap and len(freed) < n:
+            _, key = heapq.heappop(heap)
+            e = self.entries.get(key)
+            if e is None or e.ref or e.children:
+                continue
+            parent = (self.entries.get(e.parent_key)
+                      if e.parent_key is not None else None)
+            freed.append(self._drop(e))
+            # an interior node becomes evictable once its last child goes
+            if parent is not None and parent.ref == 0 \
+                    and parent.children == 0:
+                heapq.heappush(heap, (parent.last_used, parent.key))
+        return freed
+
+    def evict_block_ids_at_or_above(self, limit: int) -> List[int]:
+        """Reclaim idle cached blocks with id >= ``limit`` (pool-shrink
+        support: the free tail must really be free). Pinned blocks up there
+        block the shrink — the engine defers, as for any live block."""
+        freed: List[int] = []
+        while True:
+            doomed = [e for e in self.entries.values()
+                      if e.ref == 0 and e.children == 0
+                      and e.block_id >= limit]
+            if not doomed:
+                return freed
+            for e in doomed:
+                freed.append(self._drop(e))
+
+    # -- invariants (tests) ----------------------------------------------
+    def check(self, alloc: "BlockAllocator") -> None:
+        free = set(alloc.free)
+        child_counts: Dict[int, int] = {}
+        for e in self.entries.values():
+            assert self.by_block[e.block_id] is e
+            assert e.block_id not in free, \
+                f"cached block {e.block_id} is also on the free list"
+            assert e.ref >= 0
+            if e.parent_key is not None:
+                assert e.parent_key in self.entries, \
+                    f"entry {e.key} dangles off evicted parent"
+                child_counts[e.parent_key] = \
+                    child_counts.get(e.parent_key, 0) + 1
+        for key, e in self.entries.items():
+            assert e.children == child_counts.get(key, 0)
+        assert len(self.by_block) == len(self.entries)
 
 
 class StatePool:

@@ -35,6 +35,12 @@ class ServingReport:
     kv_peak_usage: float
     kv_peak_blocks: int
     queue_delay_p95: float
+    # terminal rejects (unservable prompts — never admitted, counted as
+    # violations so a FAILED request can't improve the SLO picture)
+    n_failed: int = 0
+    # shared-prefix KV cache (0/absent when the cache is off)
+    prefix_hit_rate: float = 0.0
+    prefill_tokens_saved: int = 0
 
     def row(self) -> str:
         return (f"ttft_p95={self.ttft_p95:.3f}s slo_viol={self.slo_violation_rate:.2%} "
@@ -43,17 +49,23 @@ class ServingReport:
 
 
 def build_report(requests: List[Request], *, ttft_slo_s: float,
-                 duration_s: float, history=None) -> ServingReport:
+                 duration_s: float, history=None,
+                 prefix_hit_rate: float = 0.0,
+                 prefill_tokens_saved: int = 0) -> ServingReport:
     fin = [r for r in requests if r.state == RState.FINISHED]
+    failed = sum(1 for r in requests if r.state == RState.FAILED)
     ttfts = [r.ttft() for r in fin if r.ttft() is not None]
     tpots = [t for r in fin for t in r.tpots()]
     n_tok = sum(len(r.generated) for r in requests)
     viol = sum(1 for t in ttfts if t > ttft_slo_s)
+    # terminally-failed requests (rejected / unservable) always violate
+    viol += failed
     # unserved/unfinished requests whose wait already exceeds SLO also violate
     # (a request still short of its SLO window at the horizon is NOT a
     # violation — it simply hasn't been waiting long enough yet)
     for r in requests:
-        if (r.state != RState.FINISHED and r.first_token_s is None
+        if (r.state not in (RState.FINISHED, RState.FAILED)
+                and r.first_token_s is None
                 and duration_s - r.arrival_s > ttft_slo_s):
             viol += 1
     deg = [r.degraded_token_frac() for r in fin] or [0.0]
@@ -74,4 +86,7 @@ def build_report(requests: List[Request], *, ttft_slo_s: float,
         preemptions=sum(r.preemptions for r in requests),
         degraded_token_frac=float(np.mean(deg)),
         kv_peak_usage=kv_peak, kv_peak_blocks=kv_peak_blocks,
-        queue_delay_p95=pct(qd, 95))
+        queue_delay_p95=pct(qd, 95),
+        n_failed=failed,
+        prefix_hit_rate=prefix_hit_rate,
+        prefill_tokens_saved=prefill_tokens_saved)

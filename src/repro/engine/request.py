@@ -12,6 +12,7 @@ class RState(enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"          # blocks freed; must re-prefill
     FINISHED = "finished"
+    FAILED = "failed"                # terminal: rejected / unservable
 
 
 @dataclasses.dataclass
@@ -29,12 +30,39 @@ class Request:
     # request resumes as a fresh PREFILLING admission.
     prefill_pos: int = 0
     prefill_chunks: int = 0           # chunk calls spent on the prompt
+    # --- prefix cache ------------------------------------------------------
+    # leading block_ids borrowed read-only from the PrefixCache (COW share
+    # boundary: the request's own writes start at block ``shared_blocks``)
+    shared_blocks: int = 0
+    # swap level each full prompt block's KV was written under (None =
+    # unwritten, -1 = chunks at mixed levels — unpublishable)
+    block_write_levels: List[Optional[int]] = dataclasses.field(
+        default_factory=list)
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
     # morphing bookkeeping: swap level under which each token was generated
     token_levels: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+
+    def note_prefill_levels(self, start: int, end: int, level: int,
+                            block_size: int) -> None:
+        """Record the swap level whose weights produced the KV for prompt
+        positions [start, end) — per full prompt block, for publishing to
+        the prefix cache. A block touched by chunks at different levels is
+        marked mixed (-1) and never published."""
+        n_full = len(self.prompt) // block_size
+        if end <= start or n_full == 0:
+            return
+        if len(self.block_write_levels) != n_full:
+            self.block_write_levels = [None] * n_full
+        b1 = min((end - 1) // block_size, n_full - 1)
+        for b in range(start // block_size, b1 + 1):
+            cur = self.block_write_levels[b]
+            if cur is None:
+                self.block_write_levels[b] = level
+            elif cur != level:
+                self.block_write_levels[b] = -1
 
     @property
     def prompt_len(self) -> int:

@@ -12,7 +12,7 @@ downscalable with a rate factor like the paper's 1.75x / 4.75x.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -22,6 +22,9 @@ class TraceRequest:
     arrival_s: float
     prompt_len: int
     max_new_tokens: int
+    # explicit token content (shared-prefix workloads); None lets the engine
+    # fabricate random tokens of prompt_len as before
+    prompt_tokens: Optional[Tuple[int, ...]] = None
 
 
 def _lens(rng, n, p_mean, p_sigma, p_max, g_mean, g_sigma, g_max):
@@ -93,4 +96,45 @@ def constant_rate(duration_s: float, rps: float, prompt_len: int = 512,
     return [TraceRequest(float(a), prompt_len, gen_len) for a in arr]
 
 
-TRACES = {"azure": azure_like, "burstgpt": burstgpt_like}
+def shared_prefix_multiturn(duration_s: float = 30.0, n_conversations: int = 12,
+                            turns_per_conv: int = 4, system_len: int = 256,
+                            conv_header_len: int = 128, turn_len: int = 64,
+                            tail_max: int = 96, gen_mean: int = 48,
+                            gen_max: int = 128, vocab: int = 32000,
+                            seed: int = 0) -> List[TraceRequest]:
+    """Multi-turn chat workload with explicit token content (prefix reuse).
+
+    Every request shares one global *system prompt* (``system_len`` tokens);
+    each conversation adds its own few-shot *header*; turn ``t`` replays the
+    conversation's accumulated history (``t * turn_len`` tokens) plus a fresh
+    user tail — the dominant production pattern the prefix cache targets:
+    within a conversation each turn's prompt is a strict extension of the
+    previous one, and across conversations the system prompt is common.
+    Arrivals: conversations start uniformly over the window, turns follow
+    with think-time gaps.
+    """
+    rng = np.random.default_rng(seed)
+    system = tuple(rng.integers(0, vocab, size=system_len).tolist())
+    out: List[TraceRequest] = []
+    for _ in range(n_conversations):
+        header = tuple(rng.integers(0, vocab, size=conv_header_len).tolist())
+        history: Tuple[int, ...] = ()
+        t = float(rng.uniform(0, duration_s * 0.5))
+        for _turn in range(turns_per_conv):
+            tail_len = int(rng.integers(8, tail_max + 1))
+            tail = tuple(rng.integers(0, vocab, size=tail_len).tolist())
+            prompt = system + header + history + tail
+            gen = int(np.clip(rng.lognormal(np.log(gen_mean), 0.4),
+                              4, gen_max))
+            out.append(TraceRequest(t, len(prompt), gen, prompt))
+            # next turn's prompt extends this one: tail + a modeled reply
+            history = history + tail + tuple(
+                rng.integers(0, vocab, size=turn_len).tolist())
+            t += float(rng.exponential(duration_s / (2 * turns_per_conv)))
+            if t >= duration_s:
+                break
+    return sorted(out, key=lambda r: r.arrival_s)
+
+
+TRACES = {"azure": azure_like, "burstgpt": burstgpt_like,
+          "shared_prefix": shared_prefix_multiturn}

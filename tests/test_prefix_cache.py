@@ -1,0 +1,379 @@
+"""Shared-prefix KV cache + fix-batch regressions (ISSUE 5).
+
+Covers: PrefixCache unit semantics (chained keys, leaf-first LRU eviction,
+refcounts), engine token-identity with the cache on vs off (including across
+swap levels — the per-block level key must refuse cross-level reuse), COW
+divergence after a shared prefix, refcount/eviction invariants under
+preemption and morph-tick reclaim, pool-tail compaction, the
+oversized-prompt head-of-line wedge, and the same-step preempt phantom-token
+hazard.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ServingConfig, reduced, MORPH_LLAMA2_7B
+from repro.core import tree_bytes
+from repro.engine import (EngineConfig, MorphServeEngine, TraceRequest)
+from repro.engine.kv_cache import BlockAllocator, PrefixCache, kv_block_bytes
+from repro.engine.request import Request, RState
+from repro.models import lm
+
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(MORPH_LLAMA2_7B)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(cfg, params, *, blocks=40, policy="static_fp16",
+                mode="performance", slots=4, seed=7, **ecfg_kw):
+    wb = tree_bytes(params)
+    bb = kv_block_bytes(cfg, BS, 4)
+    budget = int((wb + blocks * bb) / 0.95) + 2 * bb
+    sc = ServingConfig(hbm_budget_bytes=budget, kv_block_size=BS,
+                       max_batch_slots=slots, max_seq_len=256,
+                       swap_levels=(0, 1, 2, 4), mode=mode,
+                       kv_resize_step_frac=0.25)
+    return MorphServeEngine(cfg, params, sc,
+                            EngineConfig(policy=policy, compute="real",
+                                         seed=seed, **ecfg_kw))
+
+
+def run_all(eng, trace, max_steps=4000):
+    rep = eng.run_trace(trace, max_steps=max_steps)
+    return rep, [r.generated for r in eng.all_requests]
+
+
+def toks(rng, n, vocab=512):
+    return tuple(int(x) for x in rng.integers(0, vocab, size=n))
+
+
+# --------------------------------------------------------------------------
+# PrefixCache unit semantics
+# --------------------------------------------------------------------------
+def test_prefix_cache_unit_chain_and_lru():
+    pc = PrefixCache(4)
+    alloc = BlockAllocator(10)
+    tokens = list(range(12))                       # 3 full blocks
+    keys = pc.chain_keys(tokens, 0, 3)
+    assert len(set(keys)) == 3
+    # same tokens at another level chain to different keys
+    assert pc.chain_keys(tokens, 2, 3) != keys
+    ids = alloc.alloc(3)
+    for i, (k, b) in enumerate(zip(keys, ids)):
+        assert pc.insert(k, keys[i - 1] if i else None, b, 0, now=float(i))
+    pc.check(alloc)
+    # longest-match lookup pins all three blocks
+    m = pc.match(tokens, 0, 3, now=5.0)
+    assert [e.block_id for e in m] == ids
+    assert all(e.ref == 1 for e in m)
+    # a diverging third block matches only the first two
+    other = tokens[:8] + [99, 99, 99, 99]
+    m2 = pc.match(other, 0, 3, now=6.0)
+    assert [e.block_id for e in m2] == ids[:2]
+    for e in m + m2:
+        assert pc.release(e.block_id, now=7.0)
+    pc.check(alloc)
+    # eviction is leaf-first: the chain never dangles an unreachable child
+    freed = pc.evict_lru(1)
+    assert freed == [ids[2]], "LRU leaf is the chain tail"
+    pc.check(alloc)
+    assert pc.evict_lru(10) == [ids[1], ids[0]]
+    assert pc.resident_blocks == 0
+
+
+def test_prefix_cache_pinned_blocks_survive_eviction():
+    pc = PrefixCache(4)
+    alloc = BlockAllocator(10)
+    tokens = list(range(8))
+    keys = pc.chain_keys(tokens, 0, 2)
+    ids = alloc.alloc(2)
+    pc.insert(keys[0], None, ids[0], 0, now=0.0)
+    pc.insert(keys[1], keys[0], ids[1], 0, now=0.0)
+    m = pc.match(tokens, 0, 2, now=1.0)
+    assert pc.evict_lru(10) == [], "pinned blocks must not be reclaimed"
+    for e in m:
+        pc.release(e.block_id, now=2.0)
+    assert sorted(pc.evict_lru(10)) == sorted(ids)
+
+
+# --------------------------------------------------------------------------
+# token identity: cache on == cache off, bit for bit
+# --------------------------------------------------------------------------
+def test_prefix_hit_token_identity(model):
+    """A later request sharing a published prefix seeds its table from the
+    cache, prefills only the tail, and must emit the exact token stream of
+    a cache-off replay."""
+    cfg, params = model
+    rng = np.random.default_rng(11)
+    prefix = toks(rng, 3 * BS)
+    trace = [TraceRequest(0.0, 3 * BS + 10, 6, prefix + toks(rng, 10)),
+             TraceRequest(5.0, 3 * BS + 12, 6, prefix + toks(rng, 12))]
+    eng_off = make_engine(cfg, params, max_tokens_per_step=24,
+                          prefix_caching=False)
+    _, toks_off = run_all(eng_off, trace)
+    eng_on = make_engine(cfg, params, max_tokens_per_step=24,
+                         prefix_caching=True)
+    _, toks_on = run_all(eng_on, trace)
+    assert eng_on.prefix_hit_requests >= 1
+    assert eng_on.prefill_tokens_saved >= 3 * BS
+    assert toks_on == toks_off, "prefix reuse must be bit-transparent"
+    eng_on.prefix_cache.check(eng_on.pool.alloc)
+
+
+def test_prefix_cache_level_keyed_across_swap_levels(model):
+    """Blocks published at one swap level must not serve a request running
+    at another (the chain key folds the writer's level); at the original
+    level they hit again. Streams match a cache-off replay bitwise."""
+    cfg, params = model
+    rng = np.random.default_rng(13)
+    prefix = toks(rng, 2 * BS)
+    prompts = [prefix + toks(rng, 9),      # published at level 0
+               prefix + toks(rng, 7),      # runs at level 2 -> must miss
+               prefix + toks(rng, 5)]      # back at level 0 -> must hit
+
+    def run(cache_on):
+        eng = make_engine(cfg, params, policy="morph",
+                          max_tokens_per_step=24, prefix_caching=cache_on)
+        eng.controller.decide = lambda sig: None    # manual level control
+        streams = []
+        for i, (p, lvl) in enumerate(zip(prompts, (0, 2, 0))):
+            if eng.actuator.level != lvl:
+                eng.actuator.issue(lvl, eng.now)
+                eng.actuator.poll(eng.now + 1e9)    # land instantly
+                eng.controller.commit(lvl)
+                eng.ledger.set_weights(eng.actuator.weight_bytes())
+            r = eng.submit(TraceRequest(eng.now, len(p), 5, p))
+            for _ in range(500):
+                if r.state == RState.FINISHED:
+                    break
+                eng.step()
+            assert r.state == RState.FINISHED
+            streams.append(r.generated)
+        return eng, streams
+
+    eng_on, s_on = run(True)
+    eng_off, s_off = run(False)
+    assert s_on == s_off
+    # hits: request 2 missed (level 2), request 3 hit (level 0 chain alive)
+    assert eng_on.prefix_hit_requests == 1
+    assert eng_on.prefix_cache.lookups >= 3
+    eng_on.prefix_cache.check(eng_on.pool.alloc)
+
+
+# --------------------------------------------------------------------------
+# COW divergence + refcounts
+# --------------------------------------------------------------------------
+def test_cow_divergence_after_shared_prefix(model):
+    """Two concurrent holders of the same cached prefix write only their
+    own private blocks past the share boundary and produce the streams of
+    an undisturbed cache-off run."""
+    cfg, params = model
+    rng = np.random.default_rng(17)
+    prefix = toks(rng, 2 * BS)
+    trace = [TraceRequest(0.0, 2 * BS + 8, 4, prefix + toks(rng, 8)),
+             TraceRequest(4.0, 2 * BS + 6, 10, prefix + toks(rng, 6)),
+             TraceRequest(4.0, 2 * BS + 11, 10, prefix + toks(rng, 11))]
+    eng_off = make_engine(cfg, params, max_tokens_per_step=24,
+                          prefix_caching=False)
+    _, toks_off = run_all(eng_off, trace)
+
+    eng = make_engine(cfg, params, max_tokens_per_step=24,
+                      prefix_caching=True)
+    for tr in trace[:1]:
+        eng.submit(tr)
+    a = eng.all_requests[0]
+    while a.state != RState.FINISHED:
+        eng.step()
+    b = eng.submit(TraceRequest(eng.now, len(trace[1].prompt_tokens), 10,
+                                trace[1].prompt_tokens))
+    c = eng.submit(TraceRequest(eng.now, len(trace[2].prompt_tokens), 10,
+                                trace[2].prompt_tokens))
+    seen_shared = False
+    for _ in range(1000):
+        if b.state == RState.FINISHED and c.state == RState.FINISHED:
+            break
+        eng.step()
+        if (b.shared_blocks and c.shared_blocks
+                and b.block_ids and c.block_ids):
+            # both pin the SAME physical prefix blocks, ref == 2
+            assert b.block_ids[:2] == c.block_ids[:2]
+            assert set(b.block_ids[2:]).isdisjoint(c.block_ids[2:])
+            e = eng.prefix_cache.by_block[b.block_ids[0]]
+            assert e.ref == 2
+            seen_shared = True
+    assert seen_shared, "concurrent COW sharing never happened"
+    assert [r.generated for r in eng.all_requests] == toks_off
+    eng.prefix_cache.check(eng.pool.alloc)
+    # all refs returned after finish
+    assert all(e.ref == 0 for e in eng.prefix_cache.entries.values())
+
+
+def test_refcount_eviction_invariants_under_preemption(model):
+    """Pool-exhaustion preemptions with cache holders in flight: no double
+    free, no dangling refs, allocator and cache stay consistent."""
+    cfg, params = model
+    rng = np.random.default_rng(19)
+    prefix = toks(rng, BS)
+    trace = [TraceRequest(0.0, BS + 6, 4, prefix + toks(rng, 6))]
+    # two long-generation prefix sharers (short prompts, so both decode
+    # concurrently) under a tiny pool force preempts mid-decode
+    trace += [TraceRequest(2.0, BS + 4 + i, 60, prefix + toks(rng, 4 + i))
+              for i in range(2)]
+    eng = make_engine(cfg, params, blocks=8, slots=3,
+                      max_tokens_per_step=64, prefix_caching=True)
+    rep, _ = run_all(eng, trace)
+    assert rep.n_finished == 3
+    assert rep.preemptions >= 1
+    pc = eng.prefix_cache
+    pc.check(eng.pool.alloc)
+    assert all(e.ref == 0 for e in pc.entries.values())
+    free = eng.pool.alloc.free
+    assert len(free) == len(set(free)), "double-freed block id"
+    assert eng.pool.alloc.n_used == pc.resident_blocks
+
+
+# --------------------------------------------------------------------------
+# morph-tick reclaim tier + compaction (sim control plane)
+# --------------------------------------------------------------------------
+def sim_engine(**kw):
+    cfg = reduced(MORPH_LLAMA2_7B)
+    sc = ServingConfig(hbm_budget_bytes=64 * 2**20, kv_block_size=BS,
+                       max_batch_slots=4, max_seq_len=256,
+                       swap_levels=(0, 1, 2, 4), mode="performance",
+                       kv_resize_step_frac=0.25)
+    return MorphServeEngine(cfg, None, sc,
+                            EngineConfig(policy="morph", compute="sim",
+                                         seed=3, **kw))
+
+
+def test_morph_tick_evicts_cached_prefixes_first():
+    """Tier ordering: under KV pressure the controller reclaims idle cached
+    blocks before issuing a relief swap; with enough idle cache the swap
+    level never moves."""
+    eng = sim_engine(prefix_caching=True)
+    rng = np.random.default_rng(23)
+    # finish a few requests so their prompt blocks populate the cache
+    for i in range(3):
+        p = toks(rng, 2 * BS + 3, vocab=eng.cfg.vocab)
+        r = eng.submit(TraceRequest(eng.now, len(p), 3, p))
+        for _ in range(200):
+            if r.state == RState.FINISHED:
+                break
+            eng.step()
+    pc = eng.prefix_cache
+    assert pc.resident_blocks >= 6
+    # shrink the pool so the idle cached blocks dominate capacity, then
+    # report sustained KV pressure
+    assert eng.pool.resize(eng.pool.alloc.n_used + 3)
+    eng.monitor.kv_usage = 0.99
+    lvl0 = eng.actuator.level
+    eng._morph_tick()
+    assert eng.prefix_evicted_for_pressure > 0
+    pc.check(eng.pool.alloc)
+    assert eng.actuator.level == lvl0 and not eng.actuator.busy, \
+        "cache eviction should relieve pressure before any swap is issued"
+
+
+def test_shrink_pool_compacts_live_tail():
+    """A shrink blocked by live blocks in the doomed tail migrates them
+    below the cut (tables rewritten) instead of wedging."""
+    eng = sim_engine(prefix_caching=False)
+    rng = np.random.default_rng(29)
+    p = toks(rng, 2 * BS, vocab=eng.cfg.vocab)
+    r = eng.submit(TraceRequest(0.0, len(p), 50, p))
+    for _ in range(20):
+        if r.state == RState.RUNNING:
+            break
+        eng.step()
+    assert r.state == RState.RUNNING
+    # move the request's blocks to the top of the pool to pin the tail
+    alloc = eng.pool.alloc
+    hi = sorted(alloc.free)[-len(r.block_ids):]
+    alloc.release(r.block_ids)
+    for b in hi:
+        alloc.free.remove(b)
+    import heapq
+    heapq.heapify(alloc.free)
+    r.block_ids = list(hi)
+    n0 = eng.pool.num_blocks
+    tgt = max(eng.resizer.baseline - eng.resizer.step, max(hi) // 2, 2)
+    assert alloc.shrinkable_to() > tgt + 1, "tail must start out pinned"
+    applied = eng._shrink_pool(tgt)
+    assert applied is not None and applied <= n0 - 1
+    assert eng.compaction_moves >= len(hi)
+    assert all(b <= applied for b in r.block_ids), "tables rewritten low"
+    assert eng.pool.num_blocks == applied + 1
+
+
+# --------------------------------------------------------------------------
+# fix batch: HOL wedge + same-step preempt hazard
+# --------------------------------------------------------------------------
+def test_oversized_prompt_fails_terminally_no_wedge(model):
+    """An unservable prompt at the FIFO head is rejected to FAILED and the
+    requests behind it are admitted and finish (no head-of-line wedge)."""
+    cfg, params = model
+    eng = make_engine(cfg, params, max_tokens_per_step=256)
+    # bypass submit's admission guard to emulate a wedged queue head (e.g.
+    # a preempt-grown prompt): needs more blocks than max_blocks_per_seq
+    big = Request(999, 0.0, list(range(eng.max_nb * BS + BS)), 4)
+    eng.queue.append(big)
+    eng._n_live += 1
+    eng.all_requests.append(big)
+    ok = eng.submit(TraceRequest(0.0, 20, 4))
+    for _ in range(200):
+        if ok.state == RState.FINISHED:
+            break
+        eng.step()
+    assert big.state == RState.FAILED
+    assert eng.failed >= 1
+    assert ok.state == RState.FINISHED, "later arrivals must not starve"
+    from repro.engine.metrics import build_report
+    rep = build_report(eng.all_requests, ttft_slo_s=eng.sc.ttft_slo_s,
+                       duration_s=max(eng.now, 1e-9))
+    assert rep.n_failed == 1
+    assert rep.slo_violations >= 1, "FAILED counts as an SLO violation"
+
+
+def test_submit_reject_is_failed_state(model):
+    cfg, params = model
+    eng = make_engine(cfg, params)
+    r = eng.submit(TraceRequest(0.0, 10 * BS * BS, 4))   # impossible length
+    assert r.state == RState.FAILED
+    assert eng.rejected == 1 and eng.failed == 1
+
+
+def test_same_step_preempt_no_phantom_token(model):
+    """A request preempted by same-step memory pressure right after its
+    prefill emitted a first token must not be stamped with phantom
+    timestamps/TTFT for the token that was folded back into the prompt."""
+    cfg, params = model
+    eng = make_engine(cfg, params, max_tokens_per_step=256)
+    r = eng.submit(TraceRequest(0.0, 20, 8))
+    orig = eng._ensure_decode_blocks
+    fired = []
+
+    def hazard():
+        orig()
+        if not fired and r.state == RState.RUNNING and len(r.generated) == 1:
+            eng._preempt(r)            # pool exhausted elsewhere this step
+            fired.append(True)
+    eng._ensure_decode_blocks = hazard
+    for _ in range(400):
+        if r.state == RState.FINISHED:
+            break
+        eng.step()
+    assert fired, "hazard never fired"
+    assert r.state == RState.FINISHED
+    assert r.preemptions == 1
+    # one real first-token delivery, no phantom stamps
+    assert len(eng.monitor.ttft_samples) == 1
+    assert len(r.token_times) == len(r.token_levels) == len(r.generated)
+    assert r.first_token_s is not None and r.first_token_s > 0
+    assert eng.pool.alloc.n_used == 0
+    free = eng.pool.alloc.free
+    assert len(free) == len(set(free))
