@@ -27,13 +27,20 @@ class InflightSwap:
 
 
 class MorphingActuator:
-    def __init__(self, plan: SwapPlan, *, link_gbps: float = DEFAULT_LINK_GBPS):
+    def __init__(self, plan: SwapPlan, *, link_gbps: float = DEFAULT_LINK_GBPS,
+                 faults=None):
         self.plan = plan
         self.link_bps = link_gbps * 1e9
         self.level = 0
         self._inflight: Optional[InflightSwap] = None
         self._lists: Dict[int, list] = {}     # level -> mixed layer list
         self.swap_log: List[Tuple[float, int, int, float]] = []
+        # optional fault injector (repro.distributed.faults.ReplicaFaults):
+        # adds transfer delay at issue time and can abort a completing swap
+        # (level unchanged — the controller simply re-issues next window)
+        self.faults = faults
+        self.failed_swaps = 0
+        self.failed_swap_log: List[Tuple[float, int, int]] = []
 
     # ------------------------------------------------------------------
     def layer_list(self, level: Optional[int] = None):
@@ -53,6 +60,8 @@ class MorphingActuator:
             return self._inflight
         nbytes = self.plan.swap_transfer_bytes(self.level, target_level)
         dt = nbytes / self.link_bps
+        if self.faults is not None:
+            dt += self.faults.swap_delay_s(now)
         self._inflight = InflightSwap(target_level, now, now + dt, nbytes)
         return self._inflight
 
@@ -60,6 +69,14 @@ class MorphingActuator:
         """Complete the in-flight swap if its transfer window elapsed.
         Returns True when a level change took effect this call."""
         if self._inflight is None or now < self._inflight.done_at:
+            return False
+        if self.faults is not None and self.faults.swap_should_fail(now):
+            # the transfer aborted: stay at the old level, clear the slot so
+            # the control loop can retry (never wedges on a failed swap)
+            self.failed_swaps += 1
+            self.failed_swap_log.append(
+                (now, self.level, self._inflight.target_level))
+            self._inflight = None
             return False
         old = self.level
         self.level = self._inflight.target_level

@@ -1,2 +1,4 @@
 from repro.distributed import sharding
 from repro.distributed.cluster import ServingCluster, FaultEvent
+from repro.distributed.faults import (FaultPlan, FaultSpec, ReplicaFaults,
+                                      ClusterFault)

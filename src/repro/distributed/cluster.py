@@ -4,39 +4,66 @@ A pod runs many model-parallel replica groups; this module is the dispatcher
 layer above per-replica MorphServe engines (paper Fig. 2: Request Dispatcher
 + per-worker engines), with the operational features 1000-node serving needs:
 
-  * least-loaded dispatch across live replicas
-  * heartbeat failure detection; a dead replica's in-flight requests are
-    re-dispatched (KV is lost → re-prefill, counted as a preemption)
-  * restart after a configurable downtime (weights reload from the host
-    checkpoint — modeled by a restart delay)
-  * straggler mitigation: replicas whose EWMA step time exceeds
-    ``straggler_factor`` x the fleet median get drained + their queued
-    requests re-dispatched
-  * elastic scale-out/in: replicas can be added/removed mid-run
+  * **morph-aware routing**: replicas are scored on live morph telemetry —
+    queue + running depth, KV-pool pressure, swap level, chunk-budget
+    prefill backlog, and recent step time — not just queue length, so a
+    degraded (swapped/pressured) replica sheds new load before it has to
+    shed live requests
+  * heartbeat failure detection: a replica that stops beating (killed or
+    partitioned) is *fenced* — its terminal records and telemetry are
+    harvested into the cluster report, its in-flight requests re-dispatched
+    (KV lost → re-prefill) with prompt content and cluster identity
+    preserved, and it rejoins after a restart delay (weights reload from
+    the host checkpoint — modeled by the delay)
+  * a per-logical-request re-dispatch cap: a request that keeps landing on
+    dying replicas terminates as FAILED (an SLO violation) instead of
+    ping-ponging forever
+  * **graceful drain**: drained replicas (stragglers, or an explicit drain
+    fault) stop taking new work but keep stepping until their running
+    requests finish — queued work transfers out immediately
+  * elastic scale-out: replicas can be added mid-run
 
-All replicas share one virtual clock (lock-step rounds of the per-replica
-engines) so results stay deterministic.
+Faults are injected from a declarative, seeded
+:class:`repro.distributed.faults.FaultPlan` (kill / flap / slow /
+heartbeat-loss / drain / scale-out at the cluster seam; allocation
+failures, swap delays/failures, and step spikes inside each engine), or
+from the legacy :class:`FaultEvent` list. All replicas share one virtual
+clock (lock-step rounds of the per-replica engines) so every chaos run is
+deterministic for a fixed seed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServingConfig
+from repro.distributed.faults import ClusterFault, FaultPlan
 from repro.engine.engine import EngineConfig, MorphServeEngine
 from repro.engine.metrics import ServingReport, build_report
-from repro.engine.request import RState
+from repro.engine.request import Request, RState
 from repro.engine.traces import TraceRequest
 
 
 @dataclasses.dataclass
 class FaultEvent:
+    """Legacy imperative fault event (prefer ``faults.FaultPlan``)."""
     time_s: float
     kind: str                        # kill | restart | add | slow | heal
     replica: int
     factor: float = 1.0              # slow factor for 'slow'
+
+
+# routing weights: one score per replica, lowest wins (ties break on index
+# for determinism). Depth counts requests; pool/level are fractions in
+# [0, 1]; backlog is prefill work in units of steps-at-current-budget;
+# step_time is the replica's last wall step in seconds (stragglers score
+# high before drain detection even fires).
+DEFAULT_ROUTE_WEIGHTS = {"depth": 1.0, "pool": 4.0, "level": 2.0,
+                         "backlog": 0.5, "step_time": 2.0}
+
+_TERMINAL = (RState.FINISHED, RState.FAILED)
 
 
 @dataclasses.dataclass
@@ -47,6 +74,7 @@ class ReplicaState:
     last_heartbeat: float = 0.0
     restart_at: Optional[float] = None
     drained: bool = False
+    hb_mute_until: float = 0.0       # heartbeat-loss fault window end
 
 
 class ServingCluster:
@@ -54,108 +82,197 @@ class ServingCluster:
                  ecfg: EngineConfig, *, n_replicas: int = 2,
                  heartbeat_timeout_s: float = 1.0,
                  restart_delay_s: float = 5.0,
-                 straggler_factor: float = 3.0, seed: int = 0):
+                 straggler_factor: float = 3.0, seed: int = 0,
+                 max_redispatches: int = 4,
+                 route_weights: Optional[Dict[str, float]] = None):
         self.cfg, self.params, self.sc = cfg, params, serving
         self.ec = ecfg
         self.hb_timeout = heartbeat_timeout_s
         self.restart_delay = restart_delay_s
         self.straggler_factor = straggler_factor
+        self.max_redispatches = max_redispatches
+        self.route_weights = dict(DEFAULT_ROUTE_WEIGHTS,
+                                  **(route_weights or {}))
         self.now = 0.0
         self.rng = np.random.default_rng(seed)
+        self.fault_plan: Optional[FaultPlan] = None
         self.replicas: List[ReplicaState] = [
             ReplicaState(self._make_engine(i)) for i in range(n_replicas)]
         self.pending: List[TraceRequest] = []
+        self._next_cid = 0
+        # per-logical-request failover counter (cluster_id -> re-dispatches)
+        self.redispatch_counts: Dict[int, int] = {}
         self.redispatched = 0
         self.detected_failures = 0
         self.drains = 0
+        # report integrity across replica loss: terminal request records and
+        # telemetry harvested from fenced replicas before their engine is
+        # discarded, plus requests terminated by the re-dispatch cap
+        self.archived_requests: List[Request] = []
+        self.archived_history: List = []
+        self.failed_records: List[Request] = []
 
     def _make_engine(self, i: int) -> MorphServeEngine:
+        inj = (self.fault_plan.for_replica(i)
+               if self.fault_plan is not None else None)
         e = MorphServeEngine(self.cfg, self.params, self.sc,
-                             dataclasses.replace(self.ec, seed=self.ec.seed + i))
+                             dataclasses.replace(self.ec, seed=self.ec.seed + i),
+                             fault_injector=inj)
         e.now = self.now
         return e
 
+    # ------------------------------------------------------------------
+    # morph-aware routing
     # ------------------------------------------------------------------
     def _live(self) -> List[int]:
         return [i for i, r in enumerate(self.replicas)
                 if r.alive and not r.drained and r.engine is not None]
 
-    def _least_loaded(self) -> Optional[int]:
+    def _route_score(self, i: int) -> float:
+        e = self.replicas[i].engine
+        depth = len(e.queue) + len(e.running)
+        pool = e.pool.usage()
+        level = e.actuator.level / max(e.plan.n_layers, 1)
+        backlog = (sum(q.prefill_remaining for q in e.running
+                       if q.state == RState.PREFILLING)
+                   + sum(q.prompt_len for q in e.queue))
+        backlog_steps = backlog / max(e.chunk_budget, 1)
+        step_t = (e.monitor.history[-1].step_time_s
+                  if e.monitor.history else 0.0)
+        w = self.route_weights
+        return (w["depth"] * depth + w["pool"] * pool + w["level"] * level
+                + w["backlog"] * backlog_steps + w["step_time"] * step_t)
+
+    def _route(self) -> Optional[int]:
         live = self._live()
         if not live:
             return None
-        def load(i):
-            e = self.replicas[i].engine
-            return (len(e.queue) + len(e.running),
-                    e.pool.usage())
-        return min(live, key=load)
+        return min(live, key=lambda i: (self._route_score(i), i))
 
     def dispatch(self, tr: TraceRequest) -> None:
-        tgt = self._least_loaded()
+        if tr.request_id is None:
+            tr = dataclasses.replace(tr, request_id=self._next_cid)
+            self._next_cid += 1
+        tgt = self._route()
         if tgt is None:
             self.pending.append(tr)
             return
-        self.replicas[tgt].engine.submit(tr)
+        req = self.replicas[tgt].engine.submit(tr)
+        req.cluster_id = tr.request_id
 
     # ------------------------------------------------------------------
     # fault handling
     # ------------------------------------------------------------------
-    def kill(self, i: int) -> None:
+    def kill(self, i: int, *, restart_delay_s: Optional[float] = None) -> None:
         r = self.replicas[i]
         if not r.alive:
             return
         r.alive = False
-        r.restart_at = self.now + self.restart_delay
+        r.restart_at = self.now + (restart_delay_s
+                                   if restart_delay_s is not None
+                                   else self.restart_delay)
+
+    def _drain(self, i: int) -> None:
+        """Graceful drain: stop routing new work to replica ``i``; its
+        running requests keep stepping to completion, queued work transfers
+        out now (identity preserved)."""
+        r = self.replicas[i]
+        if r.drained or not r.alive or r.engine is None \
+                or len(self._live()) <= 1:
+            return
+        r.drained = True
+        self.drains += 1
+        e = r.engine
+        for q in list(e.queue):
+            e.queue.remove(q)
+            e.all_requests.remove(q)
+            e._n_live -= 1
+            self._redispatch_live(q)
+
+    def _redispatch_live(self, q: Request) -> None:
+        """Re-dispatch a live request after its replica died or drained.
+
+        Identity and remaining work are preserved: the *actual* prompt
+        tokens travel with the request (prefix-cache reuse and cross-replica
+        determinism survive failover), generated tokens are folded into the
+        prompt (device KV is lost → recompute policy), and the cluster-wide
+        request id rides along so the failover cap counts per logical
+        request."""
+        cid = q.cluster_id
+        prompt = tuple(q.prompt) + tuple(q.generated)
+        rem = q.max_new_tokens - len(q.generated)
+        if rem <= 0:                      # already had every token it needs
+            q.state = RState.FINISHED
+            q.finish_s = self.now
+            self.archived_requests.append(q)
+            return
+        if cid is not None:
+            self.redispatch_counts[cid] = \
+                self.redispatch_counts.get(cid, 0) + 1
+        self.redispatched += 1
+        if cid is not None and \
+                0 < self.max_redispatches < self.redispatch_counts[cid]:
+            # livelocked across the cluster: terminate as FAILED (an SLO
+            # violation) instead of ping-ponging between dying replicas
+            self.failed_records.append(Request(
+                rid=-1, arrival_s=q.arrival_s, prompt=list(prompt),
+                max_new_tokens=rem, state=RState.FAILED, cluster_id=cid))
+            return
+        self.dispatch(TraceRequest(q.arrival_s, len(prompt), rem, prompt,
+                                   request_id=cid))
+
+    def _harvest_and_discard(self, i: int) -> None:
+        """Fence a dead/partitioned replica: keep its FINISHED/FAILED
+        records and telemetry for the final report, re-dispatch everything
+        still live, then drop the engine (state lost)."""
+        e = self.replicas[i].engine
+        for q in e.all_requests:
+            if q.state in _TERMINAL:
+                self.archived_requests.append(q)
+            else:
+                self._redispatch_live(q)
+        self.archived_history.extend(e.monitor.history)
+        self.replicas[i].engine = None
 
     def _detect_and_recover(self) -> None:
+        # live, un-partitioned replicas beat; killed or partitioned ones
+        # go stale and get fenced after the timeout
+        for r in self.replicas:
+            if r.alive and r.engine is not None \
+                    and self.now >= r.hb_mute_until:
+                r.last_heartbeat = self.now
+        for i, r in enumerate(self.replicas):
+            if r.engine is not None \
+                    and self.now - r.last_heartbeat > self.hb_timeout:
+                self.detected_failures += 1
+                self._harvest_and_discard(i)
+                if r.alive:
+                    # partition (heartbeat loss while serving): fence it;
+                    # it rejoins through the same restart path as a kill
+                    r.alive = False
+                    r.restart_at = self.now + self.restart_delay
         med = np.median([r.engine.monitor.history[-1].step_time_s
                          for r in self.replicas
-                         if r.alive and r.engine and r.engine.monitor.history]
-                        or [0.0])
+                         if r.alive and not r.drained and r.engine
+                         and r.engine.monitor.history] or [0.0])
         for i, r in enumerate(self.replicas):
-            # heartbeat: dead replicas stop beating
             if not r.alive:
-                if self.now - r.last_heartbeat > self.hb_timeout \
-                        and r.engine is not None:
-                    self.detected_failures += 1
-                    self._redispatch_all(i)
-                    r.engine = None               # state lost
-                if r.restart_at is not None and self.now >= r.restart_at:
+                if r.restart_at is not None and self.now >= r.restart_at \
+                        and r.engine is None:
                     r.engine = self._make_engine(i)   # reload from checkpoint
                     r.alive = True
+                    r.drained = False
                     r.restart_at = None
+                    r.hb_mute_until = 0.0
                     r.last_heartbeat = self.now
                 continue
-            r.last_heartbeat = self.now
-            # straggler: drain replicas far above fleet median step time
+            if r.engine is None:
+                continue
+            # straggler: drain replicas far above the fleet median step time
             if (med > 0 and r.engine.monitor.history and
                     r.engine.monitor.history[-1].step_time_s
-                    > self.straggler_factor * med and len(self._live()) > 1
-                    and not r.drained):
-                r.drained = True
-                self.drains += 1
-                self._redispatch_queued(i)
-
-    def _redispatch_all(self, i: int) -> None:
-        e = self.replicas[i].engine
-        for r in e.all_requests:
-            if r.state in (RState.QUEUED, RState.RUNNING, RState.PREEMPTED):
-                rem = r.max_new_tokens - len(r.generated)
-                if rem > 0:
-                    self.redispatched += 1
-                    self.dispatch(TraceRequest(r.arrival_s, r.prompt_len, rem))
-                r.state = RState.FINISHED         # closed on dead replica
-                e._n_live -= 1
-
-    def _redispatch_queued(self, i: int) -> None:
-        e = self.replicas[i].engine
-        for r in list(e.queue):
-            e.queue.remove(r)
-            r.state = RState.FINISHED
-            e._n_live -= 1
-            self.redispatched += 1
-            self.dispatch(TraceRequest(r.arrival_s, r.prompt_len,
-                                       r.max_new_tokens))
+                    > self.straggler_factor * med and not r.drained):
+                self._drain(i)
 
     # ------------------------------------------------------------------
     def add_replica(self) -> int:
@@ -163,37 +280,93 @@ class ServingCluster:
             len(self.replicas))))
         return len(self.replicas) - 1
 
-    def run(self, trace: List[TraceRequest], faults: List[FaultEvent] = (),
+    # ------------------------------------------------------------------
+    def _compile_faults(self, faults) -> List[ClusterFault]:
+        if isinstance(faults, FaultPlan):
+            self.fault_plan = faults
+            for i, r in enumerate(self.replicas):
+                if r.engine is not None:
+                    inj = faults.for_replica(i)
+                    r.engine.faults = inj
+                    r.engine.actuator.faults = inj
+            return faults.cluster_events()
+        events = []
+        for f in faults:
+            kind = "hb_loss" if f.kind == "heartbeat_loss" else f.kind
+            if kind == "restart":        # legacy no-op kind
+                continue
+            events.append(ClusterFault(f.time_s, kind, f.replica,
+                                       factor=f.factor))
+        return sorted(events, key=lambda e: (e.time_s, e.replica, e.kind))
+
+    def _inject(self, ev: ClusterFault) -> None:
+        if ev.kind == "add":
+            self.add_replica()
+            return
+        if not (0 <= ev.replica < len(self.replicas)):
+            return
+        r = self.replicas[ev.replica]
+        if ev.kind == "kill":
+            self.kill(ev.replica, restart_delay_s=ev.restart_delay_s)
+        elif ev.kind == "slow":
+            r.slow_factor = ev.factor
+        elif ev.kind == "heal":
+            r.slow_factor = 1.0
+            r.drained = False
+        elif ev.kind == "hb_loss":
+            r.hb_mute_until = self.now + ev.duration_s
+        elif ev.kind == "drain":
+            self._drain(ev.replica)
+
+    # ------------------------------------------------------------------
+    def collect_requests(self) -> List[Request]:
+        """Every request record the cluster knows about: harvested archives,
+        cap-terminated failures, live engines' books, and still-undispatched
+        pending arrivals (synthesized as hung QUEUED records)."""
+        reqs = list(self.archived_requests) + list(self.failed_records)
+        for r in self.replicas:
+            if r.engine is not None:
+                reqs.extend(r.engine.all_requests)
+        for tr in self.pending:
+            reqs.append(Request(rid=-1, arrival_s=tr.arrival_s, prompt=[],
+                                max_new_tokens=tr.max_new_tokens,
+                                state=RState.QUEUED,
+                                cluster_id=tr.request_id))
+        return reqs
+
+    def collect_history(self) -> List:
+        hist = list(self.archived_history)
+        for r in self.replicas:
+            if r.engine is not None:
+                hist.extend(r.engine.monitor.history)
+        return hist
+
+    def run(self, trace: List[TraceRequest],
+            faults: Union[FaultPlan, Sequence[FaultEvent]] = (),
             *, round_s: float = 0.25, horizon_s: float = 120.0
             ) -> ServingReport:
         trace = sorted(trace, key=lambda t: t.arrival_s)
-        faults = sorted(faults, key=lambda f: f.time_s)
-        ti = fi = 0
+        events = self._compile_faults(faults)
+        ti = ei = 0
         while self.now < horizon_s:
             # inject faults due now
-            while fi < len(faults) and faults[fi].time_s <= self.now:
-                f = faults[fi]
-                fi += 1
-                if f.kind == "kill":
-                    self.kill(f.replica)
-                elif f.kind == "slow":
-                    self.replicas[f.replica].slow_factor = f.factor
-                elif f.kind == "heal":
-                    self.replicas[f.replica].slow_factor = 1.0
-                    self.replicas[f.replica].drained = False
-                elif f.kind == "add":
-                    self.add_replica()
-            # dispatch arrivals due now
+            while ei < len(events) and events[ei].time_s <= self.now:
+                self._inject(events[ei])
+                ei += 1
+            # dispatch arrivals due now; retry anything parked in pending
             while ti < len(trace) and trace[ti].arrival_s <= self.now:
                 self.dispatch(trace[ti])
                 ti += 1
             for tr in list(self.pending):
                 self.pending.remove(tr)
                 self.dispatch(tr)
-            # advance every live replica to self.now + round_s
+            # advance every serving replica to self.now + round_s. Drained
+            # replicas keep stepping: their running requests must finish
+            # (they only stop *taking* work) — skipping them froze in-flight
+            # requests forever and the done condition could never fire.
             target = self.now + round_s
             for r in self.replicas:
-                if not r.alive or r.engine is None or r.drained:
+                if not r.alive or r.engine is None:
                     continue
                 e = r.engine
                 while e.now < target:
@@ -214,16 +387,15 @@ class ServingCluster:
                                 dt * r.slow_factor
             self.now = target
             self._detect_and_recover()
-            done = (ti >= len(trace) and fi >= len(faults)
+            done = (ti >= len(trace) and ei >= len(events)
                     and not self.pending
                     and all(not (r.engine.queue or r.engine.running)
                             for r in self.replicas
-                            if r.alive and r.engine is not None))
+                            if r.engine is not None))
             if done:
                 break
-        reqs = [q for r in self.replicas if r.engine is not None
-                for q in r.engine.all_requests]
-        hist = [t for r in self.replicas if r.engine is not None
-                for t in r.engine.monitor.history]
-        return build_report(reqs, ttft_slo_s=self.sc.ttft_slo_s,
-                            duration_s=max(self.now, 1e-9), history=hist)
+        return build_report(self.collect_requests(),
+                            ttft_slo_s=self.sc.ttft_slo_s,
+                            duration_s=max(self.now, 1e-9),
+                            history=self.collect_history(),
+                            n_redispatched=self.redispatched)

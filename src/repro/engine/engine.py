@@ -84,17 +84,37 @@ class EngineConfig:
     # Off by default: resident cached blocks change pool-occupancy
     # dynamics, so workloads opt in (serving bench / shared-prefix traces).
     prefix_caching: bool = False
+    # --- fault tolerance --------------------------------------------------
+    # consecutive *transient* (injected) KV-allocation failures a request
+    # rides out — it stalls for the step and retries next step (the
+    # virtual-clock analogue of retry-with-backoff) — before the engine
+    # escalates to the preemption path
+    alloc_retry_limit: int = 3
+    # livelock cap: a request preempted more than this many times is
+    # terminated as FAILED (counted as an SLO violation) instead of cycling
+    # through re-prefill forever. <= 0 disables (default: single-engine
+    # benches keep the seed's unbounded recompute semantics).
+    max_preemptions: int = 0
+    # step-loop invariant watchdog cadence in steps (<= 0 disables):
+    # cross-checks ledger vs pool accounting, block-table bounds/ownership,
+    # prefix-cache refcounts, and the live-request counter; violations are
+    # repaired in place (graceful degradation) instead of crashing mid-trace
+    watchdog_interval: int = 16
 
 
 class MorphServeEngine:
     def __init__(self, cfg: ModelConfig, params, serving: ServingConfig,
-                 ecfg: EngineConfig, *, swap_order: Optional[Sequence[int]] = None):
+                 ecfg: EngineConfig, *, swap_order: Optional[Sequence[int]] = None,
+                 fault_injector=None):
         self.cfg = cfg
         self.sc = serving
         self.ec = ecfg
         self.now = 0.0
         self.rng = np.random.default_rng(ecfg.seed)
         self.kinds = tuple(lm.layer_kinds(cfg))
+        # deterministic chaos hooks (repro.distributed.faults.ReplicaFaults):
+        # queried at the allocation / swap / step-time seams; None = no faults
+        self.faults = fault_injector
 
         # --- morphing substrate -------------------------------------------
         order = list(swap_order) if swap_order is not None \
@@ -110,7 +130,7 @@ class MorphServeEngine:
             self.plan = build_swap_plan(cfg, params, order, serving=serving,
                                         bits=serving.swap_bits,
                                         use_kernel=self.use_quant_kernel)
-        self.actuator = MorphingActuator(self.plan)
+        self.actuator = MorphingActuator(self.plan, faults=self.faults)
         self.controller = MorphingController(serving, self.plan)
         self.monitor = ServingMonitor()
 
@@ -212,6 +232,13 @@ class MorphServeEngine:
         # steps that packed decode + prompt chunks into one iteration
         self.decode_stall_steps = 0
         self.mixed_steps = 0
+        # --- fault tolerance ------------------------------------------------
+        self._alloc_fault = False     # last _alloc_blocks miss was injected
+        self.alloc_fault_stalls = 0   # request-steps stalled on a transient
+        self.livelock_failures = 0    # requests FAILED by the preemption cap
+        self._step_idx = 0
+        self.watchdog_trips: List = []   # (time_s, kind, detail)
+        self.watchdog_repairs = 0
 
     # ------------------------------------------------------------------
     # request admission / lifecycle
@@ -275,7 +302,15 @@ class MorphServeEngine:
     def _alloc_blocks(self, n: int) -> Optional[List[int]]:
         """Allocator alloc with prefix-cache relief: idle cached prefix
         blocks are reclaimed LRU first (tier 0 — cheaper than preempting a
-        live sequence, shrinking live KV, or swapping a layer)."""
+        live sequence, shrinking live KV, or swapping a layer).
+
+        ``self._alloc_fault`` distinguishes an *injected transient* failure
+        (retryable: the allocator still has blocks) from genuine exhaustion,
+        so callers can stall-and-retry instead of escalating to preemption."""
+        self._alloc_fault = False
+        if self.faults is not None and self.faults.alloc_should_fail(self.now):
+            self._alloc_fault = True
+            return None
         got = self.pool.alloc.alloc(n)
         if got is not None or self.prefix_cache is None:
             return got
@@ -288,15 +323,23 @@ class MorphServeEngine:
     def _grow_blocks(self, r: Request, need: int) -> bool:
         """Extend ``r``'s block table to ``need`` blocks, preempting only
         later-arrived (higher-rid) slot occupants under memory pressure.
-        Returns False when ``r`` must stall this step instead."""
+        Returns False when ``r`` must stall this step instead. Transient
+        (injected) allocation failures are ridden out with a bounded
+        stall-and-retry before they escalate to preemption."""
         while need > len(r.block_ids):
             got = self._alloc_blocks(1)
             if got is None:
+                if self._alloc_fault \
+                        and r.alloc_retries < self.ec.alloc_retry_limit:
+                    r.alloc_retries += 1
+                    self.alloc_fault_stalls += 1
+                    return False          # stall; retried next step
                 cands = [q for q in self.running if q.rid > r.rid]
                 if not cands:
                     return False
                 self._preempt(max(cands, key=lambda q: q.rid))
                 continue
+            r.alloc_retries = 0
             r.block_ids.extend(got)
         return True
 
@@ -513,9 +556,15 @@ class MorphServeEngine:
         return int(jnp.argmax(logits[r.prompt_len - 1]))
 
     # ------------------------------------------------------------------
-    def _ensure_decode_blocks(self) -> None:
+    def _ensure_decode_blocks(self) -> List[Request]:
         """Allocate the next block for sequences crossing a block boundary;
-        preempt (recompute policy) when the pool is exhausted."""
+        preempt (recompute policy) when the pool is exhausted. A *transient*
+        (injected) allocation failure instead stalls the request for this
+        step — it skips decode (no KV slot for the next token), keeps its
+        state, and retries next step; only after ``alloc_retry_limit``
+        consecutive misses does it escalate to the preemption path. Returns
+        the stalled requests."""
+        stalled: List[Request] = []
         for r in sorted(self.running, key=lambda r: r.rid):
             if r.state != RState.RUNNING:
                 continue          # preempted by an earlier victim selection
@@ -523,12 +572,20 @@ class MorphServeEngine:
             while need > len(r.block_ids):
                 got = self._alloc_blocks(1)
                 if got is None:
+                    if self._alloc_fault \
+                            and r.alloc_retries < self.ec.alloc_retry_limit:
+                        r.alloc_retries += 1
+                        self.alloc_fault_stalls += 1
+                        stalled.append(r)
+                        break
                     victim = max(self.running, key=lambda q: q.rid)
                     self._preempt(victim)
                     if victim is r:
                         break
                     continue
+                r.alloc_retries = 0
                 r.block_ids.extend(got)
+        return stalled
 
     def _release_blocks(self, r: Request, *, publish: bool) -> None:
         """Return ``r``'s blocks. Shared prefix blocks drop a cache
@@ -581,7 +638,6 @@ class MorphServeEngine:
         self._release_blocks(r, publish=False)
         self._slot_req[r.slot] = None
         r.slot = -1
-        r.state = RState.PREEMPTED
         r.preemptions += 1
         # recompute policy: generated tokens are folded into the prompt and
         # a partial chunked prefill restarts from scratch (blocks are gone)
@@ -590,6 +646,16 @@ class MorphServeEngine:
         r.generated = []
         r.prefill_pos = 0
         r.block_write_levels = []
+        # livelock cap: a request that keeps getting evicted and re-prefilled
+        # is burning pool + compute for everyone — past the cap it terminates
+        # as FAILED (an SLO violation) instead of cycling forever
+        if 0 < self.ec.max_preemptions < r.preemptions:
+            r.state = RState.FAILED
+            self._n_live -= 1
+            self.failed += 1
+            self.livelock_failures += 1
+            return
+        r.state = RState.PREEMPTED
         self.queue.appendleft(r)
 
     def _decode_real(self, run: List[Request]) -> None:
@@ -799,6 +865,125 @@ class MorphServeEngine:
                     self.resize_log.append((self.now, applied))
 
     # ------------------------------------------------------------------
+    # step-loop invariant watchdog (graceful degradation, not crashes)
+    # ------------------------------------------------------------------
+    def _watchdog_trip(self, kind: str, detail: str) -> None:
+        self.watchdog_trips.append((self.now, kind, detail))
+
+    def _quarantine(self, r: Request, safe_ids: List[int]) -> None:
+        """Terminally fail a request whose block table is corrupt: release
+        only the provably-private, vetted blocks and leak the dubious ones
+        (a bounded leak degrades gracefully; a double-free corrupts another
+        sequence), then free the slot."""
+        if safe_ids:
+            self.pool.alloc.release(safe_ids)
+        r.block_ids = []
+        r.shared_blocks = 0
+        if r.slot >= 0:
+            self._slot_req[r.slot] = None
+            r.slot = -1
+        r.state = RState.FAILED
+        self._n_live -= 1
+        self.failed += 1
+
+    def _rebuild_prefix_cache(self) -> None:
+        """Reconstruct the prefix cache from ground truth: drop entries on
+        free or dangling blocks, then recompute refcounts from live shared
+        regions and children counts from parent links. Dropped blocks no
+        live request reads go back to the allocator."""
+        cache = self.prefix_cache
+        free = set(self.pool.alloc.free)
+        dropped: set = set()
+        changed = True
+        while changed:
+            changed = False
+            for e in list(cache.entries.values()):
+                if e.block_id in free or (
+                        e.parent_key is not None
+                        and e.parent_key not in cache.entries):
+                    del cache.entries[e.key]
+                    if e.block_id not in free:
+                        dropped.add(e.block_id)
+                    changed = True
+        cache.by_block = {e.block_id: e for e in cache.entries.values()}
+        refs: Dict[int, int] = {}
+        for r in self.running:
+            for b in r.block_ids[:r.shared_blocks]:
+                refs[b] = refs.get(b, 0) + 1
+        kids: Dict[int, int] = {}
+        for e in cache.entries.values():
+            e.ref = refs.get(e.block_id, 0)
+            if e.parent_key is not None:
+                kids[e.parent_key] = kids.get(e.parent_key, 0) + 1
+        for e in cache.entries.values():
+            e.children = kids.get(e.key, 0)
+        # a dropped block still read by a live holder must stay resident;
+        # everything else is reclaimable
+        self.pool.alloc.release([b for b in dropped if not refs.get(b)])
+
+    def _check_invariants(self) -> None:
+        """Cross-check the accounting the step loop depends on and repair
+        violations in place — a corrupt request fails terminally, desynced
+        counters resync — so an injected fault (or a latent bug) degrades
+        the trace instead of crashing it."""
+        # 1. ledger <-> pool accounting must agree and fit the budget
+        if (self.ledger.kv_blocks != self.pool.num_blocks - 1
+                or not self.ledger.ok()):
+            self._watchdog_trip(
+                "ledger_pool_mismatch",
+                f"ledger={self.ledger.kv_blocks} "
+                f"pool={self.pool.num_blocks - 1}")
+            self.ledger.kv_blocks = self.pool.num_blocks - 1
+            if not self.ledger.ok():
+                fit = max(self.ledger.max_kv_blocks(), 1)
+                applied = self._shrink_pool(fit)
+                self.ledger.kv_blocks = (applied if applied is not None
+                                         else self.pool.num_blocks - 1)
+            self.watchdog_repairs += 1
+        # 2. block tables: bounds, free-list overlap, private ownership
+        free = set(self.pool.alloc.free)
+        owners: set = set()
+        for r in list(self.running):
+            bad = None
+            safe: List[int] = []
+            for j, b in enumerate(r.block_ids):
+                if not (0 < b < self.pool.num_blocks):
+                    bad = f"block {b} out of bounds"
+                elif b in free:
+                    bad = f"block {b} on free list"
+                elif j >= r.shared_blocks:
+                    if b in owners:
+                        bad = f"block {b} double-owned"
+                    else:
+                        owners.add(b)
+                        if (self.prefix_cache is None
+                                or b not in self.prefix_cache.by_block):
+                            safe.append(b)
+                if bad is not None:
+                    break
+            if bad is not None:
+                self._watchdog_trip("block_table", f"rid={r.rid}: {bad}")
+                for b in r.block_ids[:r.shared_blocks]:
+                    if self.prefix_cache is not None:
+                        self.prefix_cache.release(b, self.now)
+                self._quarantine(r, safe)
+                self.watchdog_repairs += 1
+        # 3. prefix-cache refcounts / chain topology
+        if self.prefix_cache is not None:
+            try:
+                self.prefix_cache.check(self.pool.alloc)
+            except AssertionError as e:
+                self._watchdog_trip("prefix_cache", str(e))
+                self._rebuild_prefix_cache()
+                self.watchdog_repairs += 1
+        # 4. live-request counter (run_trace's O(1) liveness check)
+        live = len(self.queue) + len(self.running)
+        if self._n_live != live:
+            self._watchdog_trip("n_live", f"{self._n_live} != {live}")
+            self._n_live = live
+            self.watchdog_repairs += 1
+
+    # ------------------------------------------------------------------
     def step(self) -> float:
         """One token-budgeted engine iteration; returns elapsed virtual time.
 
@@ -817,9 +1002,14 @@ class MorphServeEngine:
             sum(c * p0 + c * c / 2 for _, p0, c in chunks)
         pf_kv = sum(p0 + c for _, p0, c in chunks)
         dec = self.decoding
+        stalled_rids: set = set()
         if dec:
-            self._ensure_decode_blocks()
-            dec = self.decoding
+            stalled = self._ensure_decode_blocks()
+            stalled_rids = {r.rid for r in stalled}
+            # a request stalled on a transient allocation fault has no KV
+            # slot for its next token: it skips this decode and retries
+            # next step (bounded by alloc_retry_limit before preemption)
+            dec = [r for r in self.decoding if r.rid not in stalled_rids]
         if dec:
             if self.ec.compute == "real":
                 self._decode_real(dec)
@@ -835,6 +1025,8 @@ class MorphServeEngine:
                 self.plan.weight_bytes(lvl))
         else:
             dt = 1e-3                                   # idle tick
+        if self.faults is not None:
+            dt *= self.faults.step_time_factor(self.now)  # injected spike
         t = self.now + dt
         for r in emitted:
             # prefill (whole or final chunk) emits the first token — unless
@@ -861,8 +1053,10 @@ class MorphServeEngine:
         # produced a token (or been evicted) whenever prefill ran beside it
         if pf_tokens and dec0:
             self.mixed_steps += 1
+            # an injected-fault stall is chaos doing its job, not a
+            # scheduler liveness bug — exclude it from the gated counter
             if any(r.preemptions == p and len(r.generated) <= n
-                   for r, n, p in dec0):
+                   for r, n, p in dec0 if r.rid not in stalled_rids):
                 self.decode_stall_steps += 1
         oldest = min((r.arrival_s for r in self.queue
                       if r.arrival_s <= self.now), default=None)
@@ -884,6 +1078,10 @@ class MorphServeEngine:
             chunk_budget=self.chunk_budget,
             prefix_cached_blocks=(self.prefix_cache.resident_blocks
                                   if self.prefix_cache is not None else 0)))
+        self._step_idx += 1
+        if self.ec.watchdog_interval > 0 \
+                and self._step_idx % self.ec.watchdog_interval == 0:
+            self._check_invariants()
         self._morph_tick()
         return dt
 

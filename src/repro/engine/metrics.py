@@ -38,6 +38,12 @@ class ServingReport:
     # terminal rejects (unservable prompts — never admitted, counted as
     # violations so a FAILED request can't improve the SLO picture)
     n_failed: int = 0
+    # requests still in a non-terminal state when the report was built —
+    # the chaos bench's no-hung-requests invariant gates on this being 0
+    n_hung: int = 0
+    # cluster failovers: logical requests re-dispatched after a replica
+    # death, drain, or fencing (0 for single-engine runs)
+    n_redispatched: int = 0
     # shared-prefix KV cache (0/absent when the cache is off)
     prefix_hit_rate: float = 0.0
     prefill_tokens_saved: int = 0
@@ -51,9 +57,12 @@ class ServingReport:
 def build_report(requests: List[Request], *, ttft_slo_s: float,
                  duration_s: float, history=None,
                  prefix_hit_rate: float = 0.0,
-                 prefill_tokens_saved: int = 0) -> ServingReport:
+                 prefill_tokens_saved: int = 0,
+                 n_redispatched: int = 0) -> ServingReport:
     fin = [r for r in requests if r.state == RState.FINISHED]
     failed = sum(1 for r in requests if r.state == RState.FAILED)
+    hung = sum(1 for r in requests
+               if r.state not in (RState.FINISHED, RState.FAILED))
     ttfts = [r.ttft() for r in fin if r.ttft() is not None]
     tpots = [t for r in fin for t in r.tpots()]
     n_tok = sum(len(r.generated) for r in requests)
@@ -88,5 +97,7 @@ def build_report(requests: List[Request], *, ttft_slo_s: float,
         kv_peak_usage=kv_peak, kv_peak_blocks=kv_peak_blocks,
         queue_delay_p95=pct(qd, 95),
         n_failed=failed,
+        n_hung=hung,
+        n_redispatched=n_redispatched,
         prefix_hit_rate=prefix_hit_rate,
         prefill_tokens_saved=prefill_tokens_saved)

@@ -44,6 +44,14 @@ class Request:
     # morphing bookkeeping: swap level under which each token was generated
     token_levels: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    # consecutive transient KV-allocation failures ridden out (reset on the
+    # first successful allocation); past the engine's retry limit the
+    # request escalates to the preemption path
+    alloc_retries: int = 0
+    # cluster-wide logical request id: preserved across re-dispatch so the
+    # control plane can cap retries per *logical* request and the chaos
+    # bench can assert every trace request reached a terminal state
+    cluster_id: Optional[int] = None
 
     def note_prefill_levels(self, start: int, end: int, level: int,
                             block_size: int) -> None:

@@ -25,6 +25,9 @@ class TraceRequest:
     # explicit token content (shared-prefix workloads); None lets the engine
     # fabricate random tokens of prompt_len as before
     prompt_tokens: Optional[Tuple[int, ...]] = None
+    # cluster-wide logical id, assigned by the dispatcher on first dispatch
+    # and preserved verbatim across re-dispatch (failover keeps identity)
+    request_id: Optional[int] = None
 
 
 def _lens(rng, n, p_mean, p_sigma, p_max, g_mean, g_sigma, g_max):

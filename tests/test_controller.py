@@ -1,0 +1,123 @@
+"""Direct unit tests for the controller's time-domain behavior: escalation
+pacing (at most one swap-level bucket per monitor window) and the
+calm-timeout restore that walks the level down out of the hysteresis dead
+band. These were previously exercised only indirectly through full serving
+runs; here the decide() contract is pinned step by step."""
+import pytest
+
+from repro.configs import MORPH_LLAMA2_7B, ServingConfig
+from repro.core import MorphingController
+from repro.core.swap_plan import build_sim_swap_plan
+
+
+def make_controller(mode="performance", **sc_kw):
+    sc = ServingConfig(mode=mode, **sc_kw)
+    plan = build_sim_swap_plan(
+        MORPH_LLAMA2_7B, list(range(MORPH_LLAMA2_7B.n_layers)),
+        levels=(0, 1, 2, 4, 8))
+    return MorphingController(sc, plan), sc
+
+
+def sig(kv, now, qd=0.0, qlen=0.0, chunk_frac=1.0):
+    return {"kv_usage": kv, "queue_delay": qd, "queue_len": qlen,
+            "time_s": now, "chunk_budget_frac": chunk_frac}
+
+
+HIGH_KV = 0.99          # above either mode's high watermark
+
+
+def test_escalation_paced_one_bucket_per_window():
+    c, sc = make_controller()
+    cmd = c.decide(sig(HIGH_KV, now=0.0, qlen=4))
+    assert cmd is not None and cmd.target_level > 0 and cmd.grow_kv
+    c.commit(cmd.target_level)
+    first = c.level
+    # sustained HIGH inside the same monitor window: the level must hold —
+    # only the KV-growth grant (and chunk shrink hint) is re-issued
+    for t in (0.01, 0.4, 0.99 * sc.monitor_window_s):
+        cmd = c.decide(sig(HIGH_KV, now=t, qlen=4))
+        assert cmd is not None
+        assert cmd.target_level == first, \
+            "transient blip ratcheted the level within one window"
+        assert cmd.grow_kv and cmd.shrink_chunk
+    # window over: the next bucket is allowed
+    cmd = c.decide(sig(HIGH_KV, now=sc.monitor_window_s, qlen=4))
+    assert cmd is not None and cmd.target_level > first
+
+
+def test_escalation_walks_one_bucket_per_window_under_sustained_high():
+    c, sc = make_controller()
+    escalate_times = []
+    t = 0.0
+    while t < 6.0 and c.level < max(c._levels):
+        cmd = c.decide(sig(HIGH_KV, now=t, qlen=4))
+        if cmd is not None and cmd.target_level != c.level:
+            escalate_times.append(t)
+            c.commit(cmd.target_level)
+        t = round(t + 0.01, 6)               # 10ms monitor samples
+    assert len(escalate_times) >= 3
+    gaps = [b - a for a, b in zip(escalate_times, escalate_times[1:])]
+    assert all(g >= sc.monitor_window_s - 1e-9 for g in gaps), gaps
+
+
+def test_calm_timeout_restores_from_dead_band():
+    c, sc = make_controller()
+    cmd = c.decide(sig(HIGH_KV, now=0.0, qlen=4))
+    c.commit(cmd.target_level)
+    lvl = c.level
+    # park kv_usage in the hysteresis dead band [low, high): neither LOW
+    # nor HIGH — the pre-fix controller would hold the level forever here
+    mid = (sc.kv_pressure_low + c.high_watermark()) / 2
+    assert c.decide(sig(mid, now=0.9 * sc.restore_patience_s)) is None
+    cmd = c.decide(sig(mid, now=sc.restore_patience_s))
+    assert cmd is not None and cmd.target_level < lvl
+    assert "calm" in cmd.reason
+    # calm restore must NOT claim the LOW-path KV shrink
+    assert not cmd.shrink_kv and cmd.grow_chunk
+
+
+def test_calm_restore_paced_one_bucket_per_patience_window():
+    c, sc = make_controller()
+    c.commit(4)                              # as if deep in a burst
+    mid = (sc.kv_pressure_low + c.high_watermark()) / 2
+    t = sc.restore_patience_s
+    cmd = c.decide(sig(mid, now=t))
+    assert cmd is not None and cmd.target_level == 2
+    c.commit(cmd.target_level)
+    # the calm clock re-armed: the very next sample must not restore again
+    assert c.decide(sig(mid, now=t + 0.01)) is None
+    cmd = c.decide(sig(mid, now=t + sc.restore_patience_s))
+    assert cmd is not None and cmd.target_level == 1
+
+
+def test_high_blip_rearms_calm_clock():
+    c, sc = make_controller()
+    cmd = c.decide(sig(HIGH_KV, now=0.0, qlen=4))
+    c.commit(cmd.target_level)
+    mid = (sc.kv_pressure_low + c.high_watermark()) / 2
+    # a HIGH blip mid-wait (paced, so no escalation) must reset the calm
+    # clock: patience counts from the *last* HIGH, not the last restore
+    blip_t = 0.6 * sc.restore_patience_s
+    cmd = c.decide(sig(HIGH_KV, now=blip_t, qlen=4))
+    assert cmd is not None and cmd.target_level == c.level   # paced: no move
+    assert c.decide(sig(mid, now=0.99 * (blip_t + sc.restore_patience_s))) \
+        is None
+    assert c.decide(sig(mid, now=blip_t + sc.restore_patience_s)) is not None
+
+
+def test_explicit_low_restores_immediately_with_kv_shrink():
+    c, sc = make_controller()
+    cmd = c.decide(sig(HIGH_KV, now=0.0, qlen=4))
+    c.commit(cmd.target_level)
+    # LOW (kv under the low watermark, queue empty) needs no patience
+    cmd = c.decide(sig(sc.kv_pressure_low / 2, now=0.01))
+    assert cmd is not None and cmd.target_level < c.level
+    assert cmd.shrink_kv and cmd.grow_chunk
+
+
+def test_low_at_level_zero_restores_chunk_budget_only():
+    c, sc = make_controller()
+    assert c.level == 0
+    cmd = c.decide(sig(sc.kv_pressure_low / 2, now=5.0, chunk_frac=0.5))
+    assert cmd is not None and cmd.target_level == 0
+    assert cmd.grow_chunk and not cmd.shrink_kv and not cmd.grow_kv

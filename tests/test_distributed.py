@@ -1,4 +1,5 @@
-"""Cluster control plane: dispatch, failure recovery, stragglers, elasticity.
+"""Cluster control plane: dispatch, failure recovery, stragglers, elasticity,
+morph-aware routing, graceful drain, and identity-preserving failover.
 Plus sharding-rule unit tests and the dry-run collective parser."""
 import jax
 import jax.numpy as jnp
@@ -7,9 +8,11 @@ import pytest
 
 from repro.configs import ServingConfig, MORPH_LLAMA2_7B
 from repro.distributed.cluster import FaultEvent, ServingCluster
+from repro.distributed.faults import FaultPlan, FaultSpec
 from repro.distributed.sharding import (cache_spec, data_spec, path_str,
                                         spec_for_param)
-from repro.engine import EngineConfig, NVIDIA_L4, azure_like
+from repro.engine import EngineConfig, NVIDIA_L4, TraceRequest, azure_like
+from repro.engine.request import Request, RState
 
 
 def make_cluster(n=2, **kw):
@@ -51,6 +54,98 @@ def test_cluster_drains_straggler():
     faults = [FaultEvent(time_s=2.0, kind="slow", replica=1, factor=10.0)]
     rep = cl.run(small_trace(60, dur=30.0), faults, horizon_s=300.0)
     assert cl.drains >= 1, "straggler was never drained"
+
+
+def test_drained_replica_finishes_running_requests():
+    # graceful drain: the drained replica must keep stepping its running
+    # requests to completion (pre-fix the advance loop skipped drained
+    # replicas, freezing in-flight work forever — the run never converged)
+    cl = make_cluster(2)
+    plan = FaultPlan(specs=(FaultSpec("drain", 2.0, replica=0),))
+    rep = cl.run(small_trace(24, dur=10.0), plan, horizon_s=200.0)
+    assert cl.drains == 1
+    assert cl.replicas[0].drained, "drain did not stick"
+    assert rep.n_hung == 0, "drained replica froze in-flight requests"
+    assert rep.n_finished == rep.n_requests
+
+
+def test_redispatch_preserves_prompt_tokens_and_identity():
+    # failover must carry the *actual* prompt tokens and the cluster-wide
+    # request id (pre-fix the rebuilt TraceRequest dropped prompt_tokens,
+    # so the surviving replica re-prefilled fabricated random tokens)
+    cl = make_cluster(2, restart_delay_s=2.0, heartbeat_timeout_s=0.5)
+    tokens = tuple(range(100, 356))
+    trace = [TraceRequest(0.0, len(tokens), 128, tokens)]
+    plan = FaultPlan(specs=(FaultSpec("kill", 0.75, replica=0),))
+    rep = cl.run(trace, plan, horizon_s=120.0)
+    assert rep.n_redispatched >= 1
+    recs = [r for r in cl.collect_requests()
+            if r.state == RState.FINISHED and r.cluster_id == 0]
+    assert len(recs) == 1, "logical request lost or duplicated in failover"
+    assert tuple(recs[0].prompt[:len(tokens)]) == tokens
+    assert recs[0].arrival_s == 0.0, "arrival time (TTFT base) not preserved"
+
+
+def test_dead_replica_terminal_records_harvested():
+    # requests that FINISHED on a replica before it died must survive into
+    # the final report (pre-fix: engine=None discarded their latencies and
+    # the replica's whole telemetry history)
+    cl = make_cluster(2, restart_delay_s=30.0, heartbeat_timeout_s=0.5)
+    trace = small_trace(30, dur=6.0)
+    plan = FaultPlan(specs=(FaultSpec("kill", 8.0, replica=0),))
+    rep = cl.run(trace, plan, horizon_s=200.0)
+    done_before_kill = [r for r in cl.archived_requests
+                        if r.state == RState.FINISHED
+                        and r.finish_s is not None and r.finish_s <= 8.0]
+    assert done_before_kill, "dead replica's finished requests were lost"
+    assert cl.archived_history, "dead replica's telemetry was lost"
+    assert rep.n_requests == len(trace), \
+        "records lost or duplicated by harvest"
+    assert rep.n_hung == 0
+
+
+def test_redispatch_cap_terminates_ping_ponging_request():
+    cl = make_cluster(2, max_redispatches=2)
+    q = Request(rid=9, arrival_s=0.0, prompt=[7] * 32, max_new_tokens=8,
+                state=RState.RUNNING, cluster_id=77)
+    for _ in range(2):                      # under the cap: re-dispatched
+        cl._redispatch_live(q)
+    assert not cl.failed_records and cl.redispatched == 2
+    cl._redispatch_live(q)                  # past the cap: FAILED record
+    assert len(cl.failed_records) == 1
+    f = cl.failed_records[0]
+    assert f.state == RState.FAILED and f.cluster_id == 77
+    assert cl.redispatch_counts[77] == 3
+
+
+def test_heartbeat_partition_fenced_and_rejoins():
+    # a partitioned replica keeps serving but stops beating: the cluster
+    # must fence it (harvest + re-dispatch) and let it rejoin later
+    cl = make_cluster(2, restart_delay_s=2.0, heartbeat_timeout_s=0.5)
+    trace = small_trace(24, dur=10.0)
+    plan = FaultPlan(specs=(
+        FaultSpec("heartbeat_loss", 2.0, replica=0, duration_s=2.0),))
+    rep = cl.run(trace, plan, horizon_s=200.0)
+    assert cl.detected_failures >= 1, "partition never fenced"
+    assert cl.replicas[0].alive, "fenced replica never rejoined"
+    assert rep.n_requests == len(trace) and rep.n_hung == 0
+
+
+def test_router_scores_pressure_not_just_queue_depth():
+    cl = make_cluster(2)
+    # fresh cluster: deterministic tie-break to the lowest index
+    assert cl._route() == 0
+    # pile work on replica 0 -> the router must prefer replica 1
+    for i in range(6):
+        cl.replicas[0].engine.submit(TraceRequest(0.0, 128, 32))
+    assert cl._route() == 1
+    # drained replicas leave the rotation entirely
+    cl.replicas[1].drained = True
+    assert cl._route() == 0
+    cl.replicas[1].drained = False
+    # a dead replica is not routable either
+    cl.replicas[1].alive = False
+    assert cl._route() == 0
 
 
 def test_cluster_elastic_scale_out():

@@ -1,0 +1,281 @@
+"""Deterministic fault injection and the engine's hardening against it:
+FaultPlan compilation, seeded injector replay, transient-allocation
+retry-then-escalate, the livelock (preemption) cap, swap-apply chaos at the
+actuator seam, step spikes, and the step-loop invariant watchdog's
+repair-in-place behavior."""
+import pytest
+
+from repro.configs import MORPH_LLAMA2_7B, ServingConfig
+from repro.core import MorphingActuator
+from repro.core.swap_plan import build_sim_swap_plan
+from repro.distributed.faults import (FaultPlan, FaultSpec, ReplicaFaults,
+                                      CLUSTER_KINDS, ENGINE_KINDS)
+from repro.engine import EngineConfig, MorphServeEngine, NVIDIA_L4, TraceRequest
+from repro.engine.request import RState
+
+
+def sim_engine(inj=None, *, hbm_gib=24.0, slots=8, policy="morph", **ec_kw):
+    sc = ServingConfig(hbm_budget_bytes=int(hbm_gib * 2**30),
+                       kv_block_size=16, max_batch_slots=slots,
+                       max_seq_len=2048, swap_levels=(0, 2, 4, 8),
+                       mode="performance")
+    ec = EngineConfig(policy=policy, compute="sim", hw=NVIDIA_L4,
+                      dtype="bfloat16", seed=0, **ec_kw)
+    return MorphServeEngine(MORPH_LLAMA2_7B, None, sc, ec,
+                            fault_injector=inj)
+
+
+def tiny_trace(n=6, prompt=256, gen=64):
+    return [TraceRequest(0.05 * i, prompt, gen) for i in range(n)]
+
+
+def injector(specs, seed=0, replica=0):
+    return FaultPlan(specs=tuple(specs), seed=seed).for_replica(replica)
+
+
+# --------------------------------------------------------------------------
+# plan / injector mechanics
+# --------------------------------------------------------------------------
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor_strike", 0.0)
+    for k in CLUSTER_KINDS + ENGINE_KINDS:
+        FaultSpec(k, 0.0)
+
+
+def test_plan_compiles_cluster_events():
+    plan = FaultPlan(specs=(
+        FaultSpec("kill", 4.0, replica=0, restart_delay_s=2.0),
+        FaultSpec("flap", 10.0, replica=1, count=3, period_s=2.0),
+        FaultSpec("slow", 1.0, replica=2, factor=8.0, duration_s=5.0),
+        FaultSpec("heartbeat_loss", 3.0, replica=0, duration_s=1.5),
+        FaultSpec("alloc_fail", 0.0, duration_s=60.0, p=0.5),
+    ))
+    ev = plan.cluster_events()
+    # engine-level kinds compile to no cluster events
+    assert all(e.kind in ("kill", "slow", "heal", "hb_loss") for e in ev)
+    kills = [e for e in ev if e.kind == "kill"]
+    assert len(kills) == 1 + 3                     # kill + 3 flap cycles
+    assert kills[0].restart_delay_s == 2.0
+    flap_times = [e.time_s for e in kills if e.replica == 1]
+    assert flap_times == [10.0, 12.0, 14.0]
+    # slow with a duration auto-heals
+    assert [e.kind for e in ev if e.replica == 2] == ["slow", "heal"]
+    assert [e.time_s for e in ev] == sorted(e.time_s for e in ev)
+
+
+def test_injector_deterministic_replay():
+    spec = [FaultSpec("alloc_fail", 0.0, duration_s=10.0, p=0.5)]
+    a = ReplicaFaults(spec, seed=7, replica=0)
+    b = ReplicaFaults(spec, seed=7, replica=0)
+    times = [0.1 * i for i in range(200)]
+    assert [a.alloc_should_fail(t) for t in times] \
+        == [b.alloc_should_fail(t) for t in times]
+    assert a.injected_alloc_failures == b.injected_alloc_failures > 0
+
+
+def test_injector_replicas_draw_independent_streams():
+    spec = [FaultSpec("alloc_fail", 0.0, duration_s=10.0, p=0.5)]
+    a = ReplicaFaults(spec, seed=7, replica=0)
+    b = ReplicaFaults(spec, seed=7, replica=1)
+    times = [0.1 * i for i in range(200)]
+    assert [a.alloc_should_fail(t) for t in times] \
+        != [b.alloc_should_fail(t) for t in times]
+
+
+def test_injector_idle_outside_window():
+    inj = injector([FaultSpec("alloc_fail", 5.0, duration_s=1.0, p=1.0),
+                    FaultSpec("step_spike", 5.0, duration_s=1.0, factor=9.0)])
+    state0 = inj.rng.bit_generator.state["state"]["state"]
+    assert not inj.alloc_should_fail(0.0)
+    assert not inj.alloc_should_fail(6.5)
+    assert inj.step_time_factor(0.0) == 1.0
+    # inactive windows must not consume rng draws (replay stability)
+    assert inj.rng.bit_generator.state["state"]["state"] == state0
+    assert inj.alloc_should_fail(5.5)
+    assert inj.step_time_factor(5.5) == 9.0
+
+
+# --------------------------------------------------------------------------
+# engine seam: transient allocation failures
+# --------------------------------------------------------------------------
+def test_transient_alloc_faults_ridden_out_by_retry():
+    # p=0.25 across the whole run with a generous retry budget: every
+    # failure is transient, so requests stall-and-retry and all finish with
+    # zero preemptions — chaos absorbed below the scheduler's escalation
+    inj = injector([FaultSpec("alloc_fail", 0.0, duration_s=1e9, p=0.25)])
+    e = sim_engine(inj, alloc_retry_limit=8)
+    rep = e.run_trace(tiny_trace())
+    assert rep.n_finished == rep.n_requests == 6
+    assert e.alloc_fault_stalls > 0
+    assert inj.injected_alloc_failures > 0
+    assert rep.preemptions == 0
+    assert rep.n_hung == 0
+
+
+def test_alloc_storm_escalates_past_retry_limit():
+    # find a moment when decodes are in flight (deterministic probe run)
+    probe = sim_engine()
+    probe.run_trace(tiny_trace())
+    t0 = min(r.first_token_s for r in probe.all_requests) + 0.05
+    # p=1.0 storm with no retry budget: the transient branch is bypassed
+    # and block-boundary allocations escalate straight to preemption
+    inj = injector([FaultSpec("alloc_fail", t0, duration_s=0.8, p=1.0)])
+    e = sim_engine(inj, alloc_retry_limit=0)
+    rep = e.run_trace(tiny_trace())
+    assert rep.preemptions > 0, "storm never escalated"
+    assert rep.n_finished == rep.n_requests, "storm was not ridden out"
+    assert e.alloc_fault_stalls == 0
+
+
+def test_livelock_cap_terminates_thrashing_requests():
+    # genuinely undersized pool + unbounded appetite = preemption thrash;
+    # the cap converts endless recompute cycling into terminal FAILED
+    def eng(budget, cap):
+        sc = ServingConfig(hbm_budget_bytes=budget, kv_block_size=16,
+                           max_batch_slots=8, max_seq_len=2048,
+                           swap_levels=(0,), mode="performance")
+        ec = EngineConfig(policy="static_fp16", compute="sim", hw=NVIDIA_L4,
+                          dtype="bfloat16", seed=0, max_preemptions=cap)
+        return MorphServeEngine(MORPH_LLAMA2_7B, None, sc, ec)
+
+    led = eng(24 * 2**30, 0).ledger          # probe the sizing constants
+    budget = (led.activation_reserve + led.weight_bytes
+              + 48 * led.kv_block_bytes + 1)
+    e = eng(budget, cap=1)
+    rep = e.run_trace([TraceRequest(0.0, 384, 256) for _ in range(12)],
+                      horizon_s=120.0)
+    assert e.livelock_failures > 0, "no request hit the preemption cap"
+    assert rep.n_hung == 0, "requests left non-terminal"
+    assert all(r.preemptions <= 2 for r in e.all_requests), \
+        "a request was preempted past the cap"
+    assert rep.slo_violations >= rep.n_failed > 0
+
+
+# --------------------------------------------------------------------------
+# actuator seam: swap delay / swap failure
+# --------------------------------------------------------------------------
+def _sim_plan():
+    return build_sim_swap_plan(MORPH_LLAMA2_7B,
+                               list(range(MORPH_LLAMA2_7B.n_layers)),
+                               levels=(0, 2, 4, 8))
+
+
+def test_swap_fault_aborts_apply_and_allows_retry():
+    inj = injector([FaultSpec("swap_fail", 0.0, duration_s=5.0, p=1.0)])
+    act = MorphingActuator(_sim_plan(), faults=inj)
+    act.issue(2, now=0.0)
+    done = act._inflight.done_at
+    assert not act.poll(now=done + 1e-6), "failed swap reported success"
+    assert act.level == 0 and not act.busy
+    assert act.failed_swaps == 1 and inj.injected_swap_failures == 1
+    # outside the fault window the controller's re-issue goes through
+    act.issue(2, now=6.0)
+    assert act.poll(now=6.0 + act.transfer_seconds(0, 2) + 1e-6)
+    assert act.level == 2
+
+
+def test_swap_delay_extends_transfer_window():
+    inj = injector([FaultSpec("swap_delay", 0.0, duration_s=10.0,
+                              delay_s=3.0)])
+    act = MorphingActuator(_sim_plan(), faults=inj)
+    base = act.transfer_seconds(0, 2)
+    act.issue(2, now=0.0)
+    assert act._inflight.done_at == pytest.approx(base + 3.0)
+    assert not act.poll(now=base + 2.9)
+    assert act.poll(now=base + 3.0 + 1e-6)
+    assert inj.injected_swap_delay_s == pytest.approx(3.0)
+
+
+def test_step_spike_slows_virtual_clock():
+    base = sim_engine()
+    base.run_trace(tiny_trace())
+    inj = injector([FaultSpec("step_spike", 0.0, duration_s=1e9,
+                              factor=4.0)])
+    spiked = sim_engine(inj)
+    spiked.run_trace(tiny_trace())
+    assert spiked.now > 2.0 * base.now, \
+        "step spike did not inflate step time"
+    # the spike is visible to the monitor (and thus the controller/router)
+    assert max(t.step_time_s for t in spiked.monitor.history) \
+        > 2.0 * max(t.step_time_s for t in base.monitor.history)
+
+
+# --------------------------------------------------------------------------
+# invariant watchdog: repair-in-place
+# --------------------------------------------------------------------------
+def _running_engine():
+    e = sim_engine(watchdog_interval=0)      # manual checks only
+    for tr in tiny_trace():
+        e.submit(tr)
+    for _ in range(50):
+        e.step()
+        if any(r.state == RState.RUNNING for r in e.running):
+            return e
+    raise AssertionError("no request reached RUNNING")
+
+
+def test_watchdog_clean_run_never_trips():
+    e = sim_engine(watchdog_interval=1)      # check every step
+    rep = e.run_trace(tiny_trace())
+    assert e.watchdog_trips == [], e.watchdog_trips
+    assert e.watchdog_repairs == 0
+    assert rep.n_finished == rep.n_requests
+
+
+def test_watchdog_resyncs_ledger_pool_mismatch():
+    e = _running_engine()
+    e.ledger.kv_blocks += 7
+    e._check_invariants()
+    assert any(k == "ledger_pool_mismatch" for _, k, _ in e.watchdog_trips)
+    assert e.ledger.kv_blocks == e.pool.num_blocks - 1
+    assert e.watchdog_repairs >= 1
+
+
+def test_watchdog_resyncs_live_counter():
+    e = _running_engine()
+    e._n_live += 3
+    e._check_invariants()
+    assert any(k == "n_live" for _, k, _ in e.watchdog_trips)
+    assert e._n_live == len(e.queue) + len(e.running)
+
+
+def test_watchdog_quarantines_corrupt_block_table():
+    e = _running_engine()
+    victim = next(r for r in e.running if r.state == RState.RUNNING)
+    victim.block_ids[-1] = e.pool.num_blocks + 99     # out of bounds
+    e._check_invariants()
+    assert victim.state == RState.FAILED and victim.slot == -1
+    assert any(k == "block_table" for _, k, _ in e.watchdog_trips)
+    # the engine keeps serving: remaining requests still reach terminal
+    for _ in range(20000):
+        if e._n_live == 0:
+            break
+        e.step()
+    states = [r.state for r in e.all_requests]
+    assert all(s in (RState.FINISHED, RState.FAILED) for s in states)
+    assert states.count(RState.FINISHED) == len(states) - 1
+
+
+def test_watchdog_quarantines_freelist_overlap():
+    e = _running_engine()
+    victim = next(r for r in e.running if r.state == RState.RUNNING)
+    free_block = e.pool.alloc.free[0]
+    victim.block_ids = victim.block_ids + [free_block]
+    e._check_invariants()
+    assert victim.state == RState.FAILED
+    assert any("free list" in d for _, k, d in e.watchdog_trips
+               if k == "block_table")
+
+
+def test_watchdog_rebuilds_prefix_cache():
+    from repro.engine.traces import shared_prefix_multiturn
+    e = sim_engine(prefix_caching=True, watchdog_interval=0)
+    e.run_trace(shared_prefix_multiturn(duration_s=6.0, n_conversations=3,
+                                        turns_per_conv=2, seed=1))
+    assert len(e.prefix_cache.entries) > 0
+    entry = next(iter(e.prefix_cache.entries.values()))
+    entry.children += 2                       # chain-topology corruption
+    e._check_invariants()
+    assert any(k == "prefix_cache" for _, k, _ in e.watchdog_trips)
+    e.prefix_cache.check(e.pool.alloc)        # repaired: check passes now

@@ -358,10 +358,11 @@ def test_same_step_preempt_no_phantom_token(model):
     fired = []
 
     def hazard():
-        orig()
+        stalled = orig()
         if not fired and r.state == RState.RUNNING and len(r.generated) == 1:
             eng._preempt(r)            # pool exhausted elsewhere this step
             fired.append(True)
+        return stalled
     eng._ensure_decode_blocks = hazard
     for _ in range(400):
         if r.state == RState.FINISHED:
