@@ -1,6 +1,6 @@
 """Cluster chaos bench: burst-trace replay under a scripted fault storm.
 
-Three legs on identical traces (simulated compute, virtual clocks, 3
+Six legs on identical traces (simulated compute, virtual clocks, 3
 replicas):
 
 * **baseline** — fault-free run: the SLO reference point.
@@ -12,6 +12,18 @@ replicas):
 * **faulted_replay** — the same plan and trace on a fresh cluster: chaos
   must be bit-deterministic for a fixed seed (faults are inputs, not
   nondeterminism).
+* **storm** — the migration leg: a drain/straggler/partition storm with the
+  KV-migration fabric enabled and migration-seam faults active (transfer
+  stalls past the abort timeout, checksum-caught chunk corruption,
+  destination death mid-import). Failovers should mostly resume from
+  migrated KV instead of re-prefilling.
+* **storm_nomig** — the identical storm with migration off: every failover
+  recomputes. Its finished token streams are the reference the storm leg's
+  must match bit-for-bit (deterministic sim streams are position-keyed, so
+  a migrated request continues exactly the stream the recompute path
+  regenerates).
+* **storm_replay** — the storm again on a fresh cluster: migration
+  counters, abort breakdown, and streams must replay exactly.
 
 CI gates (``BENCH_cluster.json``):
 
@@ -24,6 +36,11 @@ CI gates (``BENCH_cluster.json``):
 * the faulted leg and its replay agree exactly
 * the chaos actually happened: failures detected, work re-dispatched, a
   straggler drained, allocation faults injected
+* migration leg: >= 50% of failovers are recompute-free (resumed from
+  migrated KV), zero double-served requests (exactly one terminal record
+  per logical id), finished streams bit-identical to the no-migration
+  storm, and the storm replays deterministically with migration-seam
+  faults active
 
 ``PYTHONPATH=src:. python benchmarks/cluster_bench.py [--smoke]``
 """
@@ -35,7 +52,9 @@ import json
 from repro.configs import ServingConfig, MORPH_LLAMA2_7B
 from repro.distributed.cluster import ServingCluster
 from repro.distributed.faults import FaultPlan, FaultSpec
+from repro.distributed.migration import MigrationConfig
 from repro.engine import EngineConfig, NVIDIA_L4, burstgpt_like
+from repro.engine.request import RState
 
 N_REPLICAS = 3
 ROUND_S = 0.25
@@ -44,6 +63,9 @@ HORIZON_S = 300.0
 # and storms the allocator mid-burst, so some SLO loss is the *expected*
 # cost of failover (re-prefill from scratch); collapse is not
 SLO_GAP_MAX = 0.45
+# migration leg: at least this fraction of failovers must resume from
+# migrated KV (no re-prefill) despite active migration-seam faults
+RECOMPUTE_FREE_MIN = 0.5
 
 
 def make_trace(duration_s: float):
@@ -74,7 +96,29 @@ def make_plan() -> FaultPlan:
     ))
 
 
-def make_cluster() -> ServingCluster:
+def make_storm_plan() -> FaultPlan:
+    """The migration leg's storm: every seam where live state must move —
+    an explicit drain, a straggler (auto-drained, then healed), a
+    heartbeat-loss partition (fenced while its memory is still reachable)
+    — with the migration fabric itself under fault injection."""
+    return FaultPlan(seed=43, specs=(
+        FaultSpec("drain", 3.0, replica=0),
+        FaultSpec("heal", 6.0, replica=0),
+        # straggler: drained by the control plane, live work migrates out
+        FaultSpec("slow", 6.0, replica=1, factor=8.0, duration_s=3.0),
+        # partition: replica 2 is fenced alive — harvested live work
+        # migrates out of its still-addressable memory
+        FaultSpec("heartbeat_loss", 9.0, replica=2, duration_s=1.5),
+        # chaos at the migration seam itself: stalls past the channel
+        # timeout, checksum-caught corruption, destination death mid-import
+        FaultSpec("migration_stall", 0.0, duration_s=30.0, p=0.15,
+                  delay_s=2.5),
+        FaultSpec("migration_corrupt", 0.0, duration_s=30.0, p=0.1),
+        FaultSpec("migration_dest_kill", 0.0, duration_s=30.0, p=0.1),
+    ))
+
+
+def make_cluster(migration: MigrationConfig = None) -> ServingCluster:
     sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
                        max_batch_slots=16, max_seq_len=2048,
                        swap_levels=(0, 2, 4, 8), mode="performance")
@@ -85,7 +129,27 @@ def make_cluster() -> ServingCluster:
     return ServingCluster(MORPH_LLAMA2_7B, None, sc, ec,
                           n_replicas=N_REPLICAS,
                           heartbeat_timeout_s=0.6, restart_delay_s=3.0,
-                          straggler_factor=3.0, max_redispatches=4)
+                          straggler_factor=3.0, max_redispatches=4,
+                          migration=migration)
+
+
+def finished_streams(cl: ServingCluster) -> dict:
+    """cid -> sorted finished logical streams (prompt-echo excluded)."""
+    out = {}
+    for q in cl.collect_requests():
+        if q.cluster_id is not None and q.state == RState.FINISHED:
+            out.setdefault(q.cluster_id, []).append(
+                tuple(q.logical_stream()))
+    return {cid: sorted(v) for cid, v in out.items()}
+
+
+def max_terminal_records(cl: ServingCluster) -> int:
+    counts = {}
+    for q in cl.collect_requests():
+        if q.cluster_id is not None and \
+                q.state in (RState.FINISHED, RState.FAILED):
+            counts[q.cluster_id] = counts.get(q.cluster_id, 0) + 1
+    return max(counts.values(), default=0)
 
 
 def leg_stats(cl: ServingCluster, rep) -> dict:
@@ -97,6 +161,7 @@ def leg_stats(cl: ServingCluster, rep) -> dict:
         "n_failed": rep.n_failed,
         "n_hung": rep.n_hung,
         "n_redispatched": rep.n_redispatched,
+        "n_migrated": rep.n_migrated,
         "ttft_p95": rep.ttft_p95,
         "ttft_avg": rep.ttft_avg,
         "slo_violation_rate": rep.slo_violation_rate,
@@ -104,13 +169,15 @@ def leg_stats(cl: ServingCluster, rep) -> dict:
         "preemptions": rep.preemptions,
         "detected_failures": cl.detected_failures,
         "drains": cl.drains,
+        "drains_refused": cl.drains_refused,
         "watchdog_trips": watchdog,
+        "migration": cl.migration_stats(),
         "end_s": cl.now,
     }
 
 
-def run_leg(trace, plan=None):
-    cl = make_cluster()
+def run_leg(trace, plan=None, migration=None):
+    cl = make_cluster(migration)
     rep = cl.run(list(trace), plan if plan is not None else (),
                  round_s=ROUND_S, horizon_s=HORIZON_S)
     return cl, rep
@@ -123,22 +190,36 @@ def main(smoke: bool = False) -> dict:
                      "n_requests": len(trace)},
            "n_replicas": N_REPLICAS, "horizon_s": HORIZON_S,
            "fault_plan": [vars(s) | {"kind": s.kind}
-                          for s in make_plan().specs]}
+                          for s in make_plan().specs],
+           "storm_plan": [vars(s) | {"kind": s.kind}
+                          for s in make_storm_plan().specs]}
 
-    print("leg,finished/requests,failed,hung,redispatched,slo_viol,"
-          "ttft_p95_s,detected,drains")
-    legs = {}
-    for key, plan in (("baseline", None), ("faulted", make_plan()),
-                      ("faulted_replay", make_plan())):
-        cl, rep = run_leg(trace, plan)
+    print("leg,finished/requests,failed,hung,redispatched,migrated,"
+          "slo_viol,ttft_p95_s,detected,drains")
+    legs, streams = {}, {}
+    specs = (("baseline", None, None),
+             ("faulted", make_plan(), None),
+             ("faulted_replay", make_plan(), None),
+             ("storm", make_storm_plan(), MigrationConfig()),
+             ("storm_nomig", make_storm_plan(), None),
+             ("storm_replay", make_storm_plan(), MigrationConfig()))
+    for key, plan, mig in specs:
+        cl, rep = run_leg(trace, plan, mig)
         legs[key] = leg_stats(cl, rep)
         if plan is not None:
             legs[key]["injected"] = plan.injector_stats()
+            legs[key]["migration_faults"] = plan.migration_stats()
+        if key.startswith("storm"):
+            streams[key] = finished_streams(cl)
+            legs[key]["max_terminal_records"] = max_terminal_records(cl)
         s = legs[key]
         print(f"{key},{s['n_finished']}/{s['n_requests']},{s['n_failed']},"
-              f"{s['n_hung']},{s['n_redispatched']},"
+              f"{s['n_hung']},{s['n_redispatched']},{s['n_migrated']},"
               f"{s['slo_violation_rate']:.2%},{s['ttft_p95']:.3f},"
-              f"{s['detected_failures']},{s['drains']}")
+              f"{s['detected_failures']},{s['drains']}", flush=True)
+        # one 3-engine cluster is GBs of pool arrays: free it before the
+        # next leg builds its own (two at once has OOM'd CI runners)
+        del cl, rep
     out.update(legs)
 
     base, flt, rep2 = legs["baseline"], legs["faulted"], legs["faulted_replay"]
@@ -149,6 +230,13 @@ def main(smoke: bool = False) -> dict:
     slo_gap = flt["slo_violation_rate"] - base["slo_violation_rate"]
     alloc_injected = sum(v["alloc_failures"]
                          for v in flt["injected"].values())
+    storm, nomig, srep = legs["storm"], legs["storm_nomig"], \
+        legs["storm_replay"]
+    mig = storm["migration"]
+    n_failovers = mig["ok"] + storm["n_redispatched"]
+    recompute_free = mig["ok"] / max(n_failovers, 1)
+    common = set(streams["storm"]) & set(streams["storm_nomig"])
+    mig_det_keys = det_keys + ("n_migrated", "drains_refused")
     out["gates"] = {
         # every logical request reaches exactly one terminal record
         "all_terminal": bool(
@@ -163,16 +251,47 @@ def main(smoke: bool = False) -> dict:
         "chaos_exercised": bool(
             flt["detected_failures"] >= 2 and flt["n_redispatched"] > 0
             and flt["drains"] >= 1 and alloc_injected > 0),
+        # ---- migration leg ------------------------------------------------
+        # the storm actually moved state and the seam faults actually fired
+        "migration_exercised": bool(
+            mig["ok"] > 0 and mig["attempted"] > mig["ok"]
+            and sum(storm["migration_faults"].values()) > 0),
+        "recompute_free_frac": recompute_free,
+        # >= 50% of failovers resumed from migrated KV (no re-prefill)
+        "recompute_free_ok": bool(recompute_free >= RECOMPUTE_FREE_MIN),
+        # no double-serving: exactly one terminal record per logical id,
+        # with and without migration
+        "migration_one_terminal": bool(
+            storm["n_hung"] == 0 and nomig["n_hung"] == 0
+            and storm["max_terminal_records"] == 1
+            and nomig["max_terminal_records"] == 1),
+        # migrated requests' streams == the recompute run's, bit for bit
+        "migration_streams_bit_identical": bool(
+            len(common) >= 0.8 * len(trace)
+            and all(streams["storm"][c] == streams["storm_nomig"][c]
+                    for c in common)),
+        # the storm replays exactly, migration-seam faults included
+        "migration_replay_deterministic": bool(
+            all(storm[k] == srep[k] for k in mig_det_keys)
+            and storm["migration"] == srep["migration"]
+            and storm["migration_faults"] == srep["migration_faults"]
+            and streams["storm"] == streams["storm_replay"]),
     }
     with open("BENCH_cluster.json", "w") as f:
         json.dump(out, f, indent=2)
     g = out["gates"]
     print(f"# terminal={g['all_terminal']} slo_gap={slo_gap:+.2%} "
           f"(gate: <= {SLO_GAP_MAX:.0%}) replay_ok="
-          f"{g['deterministic_replay']} chaos_ok={g['chaos_exercised']}; "
+          f"{g['deterministic_replay']} chaos_ok={g['chaos_exercised']}")
+    print(f"# migration: exercised={g['migration_exercised']} "
+          f"recompute_free={g['recompute_free_frac']:.0%} "
+          f"(gate: >= {RECOMPUTE_FREE_MIN:.0%}) "
+          f"one_terminal={g['migration_one_terminal']} "
+          f"streams_ok={g['migration_streams_bit_identical']} "
+          f"storm_replay_ok={g['migration_replay_deterministic']}; "
           f"wrote BENCH_cluster.json")
     assert all(v for k, v in g.items()
-               if k not in ("slo_gap",)), g
+               if k not in ("slo_gap", "recompute_free_frac")), g
     return out
 
 

@@ -1,4 +1,6 @@
 from repro.distributed import sharding
 from repro.distributed.cluster import ServingCluster, FaultEvent
 from repro.distributed.faults import (FaultPlan, FaultSpec, ReplicaFaults,
-                                      ClusterFault)
+                                      ClusterFault, MigrationFaults)
+from repro.distributed.migration import (MigrationChannel, MigrationConfig,
+                                         MigrationResult)

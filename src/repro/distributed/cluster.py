@@ -22,6 +22,22 @@ layer above per-replica MorphServe engines (paper Fig. 2: Request Dispatcher
     fault) stop taking new work but keep stepping until their running
     requests finish — queued work transfers out immediately
   * elastic scale-out: replicas can be added mid-run
+  * **state-preserving failover** (opt-in via
+    :class:`repro.distributed.migration.MigrationConfig`): everywhere a
+    request's computed state used to die, the cluster first tries to
+    *migrate* it — drained replicas hand their running slot-holders' paged
+    KV to a low-pressure peer instead of limping to completion, and fenced
+    partitions (alive but unreachable by heartbeat) have their harvested
+    live work migrated out while the source memory is still addressable.
+    A migrated request resumes mid-stream on the destination with identity,
+    TTFT, and (in simulated compute, bit-identically) its token stream
+    intact — no re-prefill. Any transfer failure (stall past timeout,
+    checksum-caught corruption, destination death mid-import, destination
+    capacity) falls back to the recompute re-dispatch path below, so a
+    request is never stranded and never double-run. Dispatch additionally
+    does replica-crossing prefix-cache lookups: when a peer holds a longer
+    cached prefix of an arriving prompt at the target's swap level, those
+    blocks migrate ahead of admission.
 
 Faults are injected from a declarative, seeded
 :class:`repro.distributed.faults.FaultPlan` (kill / flap / slow /
@@ -40,6 +56,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServingConfig
 from repro.distributed.faults import ClusterFault, FaultPlan
+from repro.distributed.migration import MigrationChannel, MigrationConfig
 from repro.engine.engine import EngineConfig, MorphServeEngine
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import Request, RState
@@ -84,7 +101,8 @@ class ServingCluster:
                  restart_delay_s: float = 5.0,
                  straggler_factor: float = 3.0, seed: int = 0,
                  max_redispatches: int = 4,
-                 route_weights: Optional[Dict[str, float]] = None):
+                 route_weights: Optional[Dict[str, float]] = None,
+                 migration: Optional[MigrationConfig] = None):
         self.cfg, self.params, self.sc = cfg, params, serving
         self.ec = ecfg
         self.hb_timeout = heartbeat_timeout_s
@@ -94,6 +112,7 @@ class ServingCluster:
         self.route_weights = dict(DEFAULT_ROUTE_WEIGHTS,
                                   **(route_weights or {}))
         self.now = 0.0
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.fault_plan: Optional[FaultPlan] = None
         self.replicas: List[ReplicaState] = [
@@ -105,6 +124,21 @@ class ServingCluster:
         self.redispatched = 0
         self.detected_failures = 0
         self.drains = 0
+        self.drains_refused = 0      # drain no-ops (dead / last live replica)
+        # KV migration fabric (None: every failover is recompute re-dispatch)
+        self.migration = migration
+        self.channel: Optional[MigrationChannel] = None
+        if migration is not None:
+            cost = self.replicas[0].engine.cost
+            self.channel = MigrationChannel(migration, cost,
+                                            dtype_bytes=cost.dtype_bytes)
+        self.migrations_attempted = 0
+        self.migrations_ok = 0
+        self.migration_aborts = {"stall": 0, "corrupt": 0, "dest_dead": 0,
+                                 "capacity": 0}
+        self.migrated_blocks = 0
+        self.prefix_migrations = 0
+        self.prefix_blocks_migrated = 0
         # report integrity across replica loss: terminal request records and
         # telemetry harvested from fenced replicas before their engine is
         # discarded, plus requests terminated by the re-dispatch cap
@@ -143,8 +177,8 @@ class ServingCluster:
         return (w["depth"] * depth + w["pool"] * pool + w["level"] * level
                 + w["backlog"] * backlog_steps + w["step_time"] * step_t)
 
-    def _route(self) -> Optional[int]:
-        live = self._live()
+    def _route(self, exclude: Optional[int] = None) -> Optional[int]:
+        live = [i for i in self._live() if i != exclude]
         if not live:
             return None
         return min(live, key=lambda i: (self._route_score(i), i))
@@ -153,10 +187,21 @@ class ServingCluster:
         if tr.request_id is None:
             tr = dataclasses.replace(tr, request_id=self._next_cid)
             self._next_cid += 1
+        if tr.prompt_tokens is None:
+            # fabricate prompt content at the *cluster* seam, keyed by the
+            # logical request id — per-engine rng fabrication would make a
+            # request's tokens (and its sim stream seed) depend on placement
+            # history, defeating cross-run bit-identity checks
+            prng = np.random.default_rng([self.seed, tr.request_id])
+            tr = dataclasses.replace(tr, prompt_tokens=tuple(
+                int(t) for t in prng.integers(0, self.cfg.vocab,
+                                              size=tr.prompt_len)))
         tgt = self._route()
         if tgt is None:
             self.pending.append(tr)
             return
+        if self.channel is not None and self.channel.cfg.prefix_migration:
+            self._migrate_prefix(tr, tgt)
         req = self.replicas[tgt].engine.submit(tr)
         req.cluster_id = tr.request_id
 
@@ -173,31 +218,133 @@ class ServingCluster:
                                    else self.restart_delay)
 
     def _drain(self, i: int) -> None:
-        """Graceful drain: stop routing new work to replica ``i``; its
-        running requests keep stepping to completion, queued work transfers
-        out now (identity preserved)."""
+        """Graceful drain: stop routing new work to replica ``i``. Queued
+        work transfers out now (identity preserved); running slot-holders
+        migrate their computed KV to a peer when the migration fabric is
+        configured, and otherwise — or when a transfer fails — keep
+        stepping here to completion."""
         r = self.replicas[i]
-        if r.drained or not r.alive or r.engine is None \
-                or len(self._live()) <= 1:
+        if r.drained:
+            return
+        if not r.alive or r.engine is None or len(self._live()) <= 1:
+            # dead replica, or the last live one: draining it would stop
+            # the cluster — refuse (visibly, not as a silent no-op)
+            self.drains_refused += 1
             return
         r.drained = True
         self.drains += 1
         e = r.engine
-        for q in list(e.queue):
-            e.queue.remove(q)
-            e.all_requests.remove(q)
-            e._n_live -= 1
-            self._redispatch_live(q)
+        for q in e.release_queued():
+            self._redispatch_live(q)     # queued: no device state to move
+        if self.channel is not None:
+            # drain handoff: a straggler's live work leaves *with its KV*
+            # instead of limping to completion at straggler speed
+            for q in list(e.running):
+                self._try_migrate(q, i)  # failure → keeps stepping here
 
-    def _redispatch_live(self, q: Request) -> None:
+    def _try_migrate(self, q: Request, src: int) -> bool:
+        """Move a live slot-holder's paged-KV state from replica ``src`` to
+        the best peer. True only when the destination has fully committed
+        the request and the source record is detached — every failure path
+        returns False with the source state untouched (drain: the request
+        keeps stepping; fencing: the caller falls back to recompute)."""
+        if self.channel is None:
+            return False
+        e_src = self.replicas[src].engine
+        if e_src is None:
+            return False
+        tgt = self._route(exclude=src)
+        if tgt is None:
+            return False
+        st = e_src.export_request_state(q)
+        if st is None:
+            return False                 # nothing exportable: fall back
+        self.migrations_attempted += 1
+        faults = (self.fault_plan.migration_faults()
+                  if self.fault_plan is not None else None)
+        res, k, v = self.channel.transfer(st.n_blocks, st.k, st.v,
+                                          faults=faults, now=self.now)
+        if not res.ok:
+            self.migration_aborts[
+                "stall" if res.reason == "stall" else "corrupt"] += 1
+            return False
+        if faults is not None and faults.dest_kill_should_fire(self.now):
+            # destination dies mid-import: nothing was committed there, so
+            # the source copy is still the only live one — kill the target
+            # through the normal fence/restart lifecycle and fall back
+            self.migration_aborts["dest_dead"] += 1
+            self.kill(tgt)
+            return False
+        st.k, st.v = k, v
+        dst = self.replicas[tgt].engine
+        imported = dst.import_request_state(st)
+        if imported is None:
+            self.migration_aborts["capacity"] += 1
+            return False
+        dst.now += res.time_s            # import busy-time lands on the dest
+        e_src.detach_request(q)          # exactly one live copy from here on
+        self.migrations_ok += 1
+        self.migrated_blocks += st.n_blocks
+        return True
+
+    def _migrate_prefix(self, tr: TraceRequest, tgt: int) -> None:
+        """Replica-crossing prefix-cache lookup: when a peer holds a longer
+        cached prefix of this prompt at the target's swap level than the
+        target does, migrate those blocks ahead of admission so the target's
+        own lookup hits locally instead of re-prefilling."""
+        dst = self.replicas[tgt].engine
+        if dst.prefix_cache is None or tr.prompt_tokens is None:
+            return
+        level = dst.actuator.level
+        bs = dst.prefix_cache.block_size
+        max_blocks = len(tr.prompt_tokens) // bs
+        if max_blocks <= 0:
+            return
+        local = len(dst.prefix_cache.peek(tr.prompt_tokens, level,
+                                          max_blocks))
+        best, best_entries, best_len = None, None, local
+        for j in self._live():
+            e = self.replicas[j].engine
+            if j == tgt or e.prefix_cache is None \
+                    or e.actuator.level != level:
+                continue                 # cache keys are level-scoped
+            ents = e.prefix_cache.peek(tr.prompt_tokens, level, max_blocks)
+            if len(ents) > best_len:
+                best, best_entries, best_len = j, ents, len(ents)
+        if best is None or best_len - local < self.channel.cfg.min_prefix_blocks:
+            return
+        src_e = self.replicas[best].engine
+        k, v = src_e.export_prefix_payload(best_entries)
+        faults = (self.fault_plan.migration_faults()
+                  if self.fault_plan is not None else None)
+        res, k, v = self.channel.transfer(len(best_entries), k, v,
+                                          faults=faults, now=self.now)
+        if not res.ok:                   # best-effort: admission proceeds
+            self.migration_aborts[
+                "stall" if res.reason == "stall" else "corrupt"] += 1
+            return
+        adopted = dst.import_prefix_chain(tr.prompt_tokens, level,
+                                          len(best_entries), k, v)
+        if adopted:
+            dst.now += res.time_s
+            self.prefix_migrations += 1
+            self.prefix_blocks_migrated += adopted
+
+    def _redispatch_live(self, q: Request, src: Optional[int] = None) -> None:
         """Re-dispatch a live request after its replica died or drained.
 
-        Identity and remaining work are preserved: the *actual* prompt
-        tokens travel with the request (prefix-cache reuse and cross-replica
-        determinism survive failover), generated tokens are folded into the
-        prompt (device KV is lost → recompute policy), and the cluster-wide
-        request id rides along so the failover cap counts per logical
-        request."""
+        When ``src`` names a still-reachable replica (partition fencing,
+        drain), migration is tried first: the request resumes mid-stream on
+        a peer with its KV intact — no re-prefill, no re-dispatch count.
+        Otherwise (or on any transfer failure) the recompute policy runs:
+        the *actual* prompt tokens travel with the request (prefix-cache
+        reuse and cross-replica determinism survive failover), generated
+        tokens are folded into the prompt (device KV lost), the stream seed
+        and original identity ride along so the surviving replica continues
+        the same logical stream, and the cluster-wide request id keeps the
+        failover cap counting per logical request."""
+        if src is not None and self._try_migrate(q, src):
+            return
         cid = q.cluster_id
         prompt = tuple(q.prompt) + tuple(q.generated)
         rem = q.max_new_tokens - len(q.generated)
@@ -213,24 +360,37 @@ class ServingCluster:
         if cid is not None and \
                 0 < self.max_redispatches < self.redispatch_counts[cid]:
             # livelocked across the cluster: terminate as FAILED (an SLO
-            # violation) instead of ping-ponging between dying replicas
+            # violation) instead of ping-ponging between dying replicas.
+            # The record keeps the request's real identity — its rid, its
+            # *original* token budget, stream seed, and prompt boundary —
+            # so report accounting and replay tooling see the request as
+            # it was, not the synthetic remainder that failed to place.
             self.failed_records.append(Request(
-                rid=-1, arrival_s=q.arrival_s, prompt=list(prompt),
-                max_new_tokens=rem, state=RState.FAILED, cluster_id=cid))
+                rid=q.rid, arrival_s=q.arrival_s, prompt=list(prompt),
+                max_new_tokens=q.orig_max_new_tokens, state=RState.FAILED,
+                cluster_id=cid, token_seed=q.token_seed,
+                orig_prompt_len=q.orig_prompt_len,
+                orig_max_new_tokens=q.orig_max_new_tokens))
             return
         self.dispatch(TraceRequest(q.arrival_s, len(prompt), rem, prompt,
-                                   request_id=cid))
+                                   request_id=cid, token_seed=q.token_seed,
+                                   orig_prompt_len=q.orig_prompt_len,
+                                   orig_max_new_tokens=q.orig_max_new_tokens))
 
     def _harvest_and_discard(self, i: int) -> None:
         """Fence a dead/partitioned replica: keep its FINISHED/FAILED
-        records and telemetry for the final report, re-dispatch everything
-        still live, then drop the engine (state lost)."""
+        records and telemetry for the final report, move everything still
+        live (migrating KV out of a *partitioned* replica — alive, merely
+        unreachable by heartbeat — whose memory is still addressable; a
+        killed replica's state is gone, so its work recomputes), then drop
+        the engine."""
         e = self.replicas[i].engine
-        for q in e.all_requests:
+        src = i if self.replicas[i].alive else None
+        for q in list(e.all_requests):
             if q.state in _TERMINAL:
                 self.archived_requests.append(q)
             else:
-                self._redispatch_live(q)
+                self._redispatch_live(q, src=src)
         self.archived_history.extend(e.monitor.history)
         self.replicas[i].engine = None
 
@@ -273,6 +433,22 @@ class ServingCluster:
                     r.engine.monitor.history[-1].step_time_s
                     > self.straggler_factor * med and not r.drained):
                 self._drain(i)
+
+    # ------------------------------------------------------------------
+    def migration_stats(self) -> Dict:
+        """Migration observability for benches/tests: attempt/abort
+        breakdown, moved volume, prefix-migration counts, and the raw
+        channel counters (empty-ish when migration is off)."""
+        d = {"attempted": self.migrations_attempted,
+             "ok": self.migrations_ok,
+             "aborts": dict(self.migration_aborts),
+             "blocks": self.migrated_blocks,
+             "prefix_migrations": self.prefix_migrations,
+             "prefix_blocks": self.prefix_blocks_migrated,
+             "drains_refused": self.drains_refused}
+        if self.channel is not None:
+            d["channel"] = self.channel.stats()
+        return d
 
     # ------------------------------------------------------------------
     def add_replica(self) -> int:
@@ -398,4 +574,5 @@ class ServingCluster:
                             ttft_slo_s=self.sc.ttft_slo_s,
                             duration_s=max(self.now, 1e-9),
                             history=self.collect_history(),
-                            n_redispatched=self.redispatched)
+                            n_redispatched=self.redispatched,
+                            n_migrated=self.migrations_ok)

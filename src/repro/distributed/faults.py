@@ -38,6 +38,23 @@ applies to every replica):
   ``swap_fail``       a completing swap aborts with probability ``p``
                       (level unchanged; the controller re-issues)
   ``step_spike``      engine step time multiplied by ``factor``
+
+migration-seam (window ``[start_s, start_s + duration_s)``; drawn once per
+KV-migration attempt from the plan's dedicated migration rng stream):
+  ``migration_stall``      the transfer stalls ``delay_s`` extra seconds
+                           with probability ``p`` — past the channel's stall
+                           timeout it aborts and failover falls back to
+                           recompute re-dispatch
+  ``migration_corrupt``    one in-flight chunk is corrupted with
+                           probability ``p``; the per-chunk checksum catches
+                           it, the migration aborts cleanly, fallback
+                           recompute (never a silent bad import)
+  ``migration_dest_kill``  the destination replica dies mid-import with
+                           probability ``p``: the half-imported request is
+                           discarded before commit (exactly one live copy
+                           survives, on the fallback path) and the
+                           destination goes through the normal kill/fence
+                           lifecycle
 """
 from __future__ import annotations
 
@@ -49,6 +66,8 @@ import numpy as np
 CLUSTER_KINDS = ("kill", "flap", "slow", "heal", "heartbeat_loss", "drain",
                  "add")
 ENGINE_KINDS = ("alloc_fail", "swap_delay", "swap_fail", "step_spike")
+MIGRATION_KINDS = ("migration_stall", "migration_corrupt",
+                   "migration_dest_kill")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +85,7 @@ class FaultSpec:
     restart_delay_s: Optional[float] = None   # kill/flap override
 
     def __post_init__(self):
-        if self.kind not in CLUSTER_KINDS + ENGINE_KINDS:
+        if self.kind not in CLUSTER_KINDS + ENGINE_KINDS + MIGRATION_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
 
     def active(self, now: float) -> bool:
@@ -137,6 +156,56 @@ class ReplicaFaults:
                 "swap_delay_s": self.injected_swap_delay_s}
 
 
+class MigrationFaults:
+    """Migration-seam injector, shared cluster-wide (one transfer fabric).
+
+    Queried once per KV-migration attempt; draws come from a dedicated rng
+    stream seeded ``(plan.seed, _STREAM)`` and only inside active windows,
+    so runs without migrations — or without migration faults — leave the
+    stream untouched and replays stay bit-deterministic."""
+
+    _STREAM = 0x4D16  # 'MIG': disjoint from any per-replica (seed, i) stream
+
+    def __init__(self, specs: Sequence[FaultSpec], seed: int):
+        self.rng = np.random.default_rng([seed, self._STREAM])
+        mine = [s for s in specs if s.kind in MIGRATION_KINDS]
+        self._stall = [s for s in mine if s.kind == "migration_stall"]
+        self._corrupt = [s for s in mine if s.kind == "migration_corrupt"]
+        self._dest_kill = [s for s in mine
+                           if s.kind == "migration_dest_kill"]
+        # observability (bench / tests)
+        self.injected_stalls = 0
+        self.injected_corruptions = 0
+        self.injected_dest_kills = 0
+
+    def stall_seconds(self, now: float) -> float:
+        d = 0.0
+        for s in self._stall:
+            if s.active(now) and self.rng.random() < s.p:
+                self.injected_stalls += 1
+                d += s.delay_s
+        return d
+
+    def corrupt_should_fire(self, now: float) -> bool:
+        for s in self._corrupt:
+            if s.active(now) and self.rng.random() < s.p:
+                self.injected_corruptions += 1
+                return True
+        return False
+
+    def dest_kill_should_fire(self, now: float) -> bool:
+        for s in self._dest_kill:
+            if s.active(now) and self.rng.random() < s.p:
+                self.injected_dest_kills += 1
+                return True
+        return False
+
+    def stats(self) -> Dict[str, float]:
+        return {"migration_stalls": self.injected_stalls,
+                "migration_corruptions": self.injected_corruptions,
+                "migration_dest_kills": self.injected_dest_kills}
+
+
 @dataclasses.dataclass
 class FaultPlan:
     """Declarative chaos script: one object drives tests and benches.
@@ -149,14 +218,26 @@ class FaultPlan:
 
     def __post_init__(self):
         self._injectors: Dict[int, ReplicaFaults] = {}
+        self._migration: Optional[MigrationFaults] = None
 
     def for_replica(self, i: int) -> ReplicaFaults:
         if i not in self._injectors:
             self._injectors[i] = ReplicaFaults(self.specs, self.seed, i)
         return self._injectors[i]
 
+    def migration_faults(self) -> MigrationFaults:
+        """The cluster-wide migration-seam injector (cached: one rng stream
+        per plan, surviving replica restarts like the engine injectors)."""
+        if self._migration is None:
+            self._migration = MigrationFaults(self.specs, self.seed)
+        return self._migration
+
     def injector_stats(self) -> Dict[int, Dict[str, float]]:
         return {i: inj.stats() for i, inj in sorted(self._injectors.items())}
+
+    def migration_stats(self) -> Dict[str, float]:
+        return (self._migration.stats() if self._migration is not None
+                else MigrationFaults((), 0).stats())
 
     def cluster_events(self) -> List[ClusterFault]:
         ev: List[ClusterFault] = []

@@ -1,4 +1,5 @@
-from repro.engine.engine import MorphServeEngine, EngineConfig
+from repro.engine.engine import (MorphServeEngine, EngineConfig,
+                                 RequestKVState)
 from repro.engine.kv_cache import (PagedKVPool, BlockAllocator, PrefixCache,
                                    kv_block_bytes)
 from repro.engine.cost_model import (CostModel, HardwareProfile, NVIDIA_L4,

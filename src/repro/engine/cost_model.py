@@ -143,6 +143,22 @@ class CostModel:
         t_mem = (weight_bytes + kv_read) / self.hw.hbm_bw
         return max(t_compute, t_mem) + self.fixed_overhead_s
 
+    def kv_migration_bytes(self, n_blocks: int,
+                           compress_ratio: float = 1.0) -> int:
+        """Wire bytes for ``n_blocks`` paged-KV blocks (all layers, k+v),
+        optionally compressed in flight (e.g. int8: ratio 1/dtype_bytes)."""
+        return int(n_blocks * self._kvb * compress_ratio)
+
+    def kv_migration_time(self, n_blocks: int, link_bps: float,
+                          latency_s: float = 0.0,
+                          compress_ratio: float = 1.0) -> float:
+        """Modeled cross-replica transfer time for a request's KV blocks:
+        per-transfer setup latency + wire bytes over the inter-replica link.
+        This is the cost the control plane weighs against a from-scratch
+        re-prefill when deciding whether migration is worth it."""
+        return latency_s + self.kv_migration_bytes(
+            n_blocks, compress_ratio) / max(link_bps, 1.0)
+
     def prefill_time(self, prompt_tokens: int) -> float:
         """A whole prompt as its own step (fp16-resident weights)."""
         return self.mixed_step_time(0, 0, prompt_tokens,

@@ -31,9 +31,45 @@ from repro.engine import model_exec
 from repro.engine.cost_model import CostModel, HardwareProfile, NVIDIA_L4
 from repro.engine.kv_cache import PagedKVPool, PrefixCache, kv_block_bytes
 from repro.engine.metrics import ServingReport, build_report
-from repro.engine.request import Request, RState
+from repro.engine.request import (Request, RState, derive_token_seed,
+                                  sim_token)
 from repro.engine.traces import TraceRequest
 from repro.models import lm
+
+
+@dataclasses.dataclass
+class RequestKVState:
+    """Host-side export of one live request: its full scheduling/identity
+    metadata plus the contents of its paged-KV blocks.
+
+    This is the unit of cross-replica migration (drain handoff, partition
+    fencing, straggler offload): the importer allocates its *own* block ids,
+    scatters the payload, and resumes decode mid-stream — a bit-identical
+    continuation, no re-prefill. ``k``/``v`` are None in simulated compute
+    (the pool holds no real KV; the byte volume is still modeled from
+    ``n_blocks``)."""
+    cluster_id: Optional[int]
+    arrival_s: float
+    prompt: List[int]
+    generated: List[int]
+    max_new_tokens: int
+    orig_prompt_len: int
+    orig_max_new_tokens: int
+    token_seed: int
+    prefill_pos: int
+    preemptions: int
+    prefill_chunks: int
+    first_token_s: Optional[float]
+    token_times: List[float]
+    token_levels: List[int]
+    # swap level each full prompt block's KV was written under, plus the
+    # exporter's live level — the importer preserves both so prefix-cache
+    # publication and degradation accounting stay truthful after the move
+    block_write_levels: List[Optional[int]]
+    kv_level: int
+    n_blocks: int
+    k: Optional[np.ndarray] = None
+    v: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -249,7 +285,13 @@ class MorphServeEngine:
         else:
             prompt = list(self.rng.integers(0, self.cfg.vocab,
                                             size=tr.prompt_len))
-        r = Request(self._next_rid, tr.arrival_s, prompt, tr.max_new_tokens)
+        r = Request(self._next_rid, tr.arrival_s, prompt, tr.max_new_tokens,
+                    token_seed=(tr.token_seed if tr.token_seed is not None
+                                else derive_token_seed(prompt)),
+                    orig_prompt_len=(-1 if tr.orig_prompt_len is None
+                                     else tr.orig_prompt_len),
+                    orig_max_new_tokens=(-1 if tr.orig_max_new_tokens is None
+                                         else tr.orig_max_new_tokens))
         self._next_rid += 1
         self.all_requests.append(r)
         # reject requests that can never fit (block table or max-grown pool)
@@ -265,11 +307,156 @@ class MorphServeEngine:
         self._n_live += 1
         return r
 
+    def _sim_token(self, r: Request) -> int:
+        """Simulated-compute next token: a pure function of the request's
+        token seed and absolute context position, NOT of engine rng state —
+        so preemption, re-dispatch, and mid-decode migration all regenerate
+        the exact stream the uninterrupted run would have produced."""
+        return sim_token(r.token_seed, r.context_len, self.cfg.vocab)
+
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self._slot_req):
             if r is None:
                 return i
         return None
+
+    # ------------------------------------------------------------------
+    # cross-replica state transfer (drain handoff / failover migration)
+    # ------------------------------------------------------------------
+    def release_queued(self) -> List[Request]:
+        """Evict every queued (not-yet-slot-holding) request and hand it to
+        the caller for re-dispatch elsewhere — the drain-handoff entry point.
+        The live-counter invariant the watchdog audits stays maintained
+        *inside* the engine (this replaces the cluster's private-field
+        surgery on ``queue`` / ``all_requests`` / ``_n_live``)."""
+        out: List[Request] = []
+        while self.queue:
+            q = self.queue.popleft()
+            if q in self.all_requests:
+                self.all_requests.remove(q)
+            self._n_live -= 1
+            out.append(q)
+        return out
+
+    def export_request_state(self, r: Request) -> Optional[RequestKVState]:
+        """Gather a live slot-holder's state to host: scheduling/identity
+        metadata plus its paged-KV block contents. Returns None when the
+        request holds no exportable device state (not a slot holder, or a
+        recurrent-state family whose state lives outside the paged pool) —
+        the caller falls back to recompute re-dispatch."""
+        if r.slot < 0 or r.state not in (RState.RUNNING, RState.PREFILLING):
+            return None
+        if self.ec.compute == "real" and self.cfg.family in ("ssm", "hybrid"):
+            return None            # per-slot recurrent state is not paged KV
+        k = v = None
+        if self.ec.compute == "real" and r.block_ids:
+            k, v = self.pool.gather_blocks(r.block_ids)
+        return RequestKVState(
+            cluster_id=r.cluster_id, arrival_s=r.arrival_s,
+            prompt=list(r.prompt), generated=list(r.generated),
+            max_new_tokens=r.max_new_tokens,
+            orig_prompt_len=r.orig_prompt_len,
+            orig_max_new_tokens=r.orig_max_new_tokens,
+            token_seed=r.token_seed, prefill_pos=r.prefill_pos,
+            preemptions=r.preemptions, prefill_chunks=r.prefill_chunks,
+            first_token_s=r.first_token_s,
+            token_times=list(r.token_times),
+            token_levels=list(r.token_levels),
+            block_write_levels=list(r.block_write_levels),
+            kv_level=self.actuator.level, n_blocks=len(r.block_ids),
+            k=k, v=v)
+
+    def import_request_state(self, st: RequestKVState) -> Optional[Request]:
+        """Adopt a migrated request: allocate local blocks, scatter the KV
+        payload, and resume exactly where the exporter stopped — mid-decode
+        (RUNNING) or mid-chunked-prefill (PREFILLING) — with identity,
+        timestamps, and TTFT preserved. Returns None when this engine cannot
+        take it right now (no free slot, or allocation failed under
+        pressure/injected faults); the import is all-or-nothing, so a None
+        leaves the engine untouched."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        ids = self._alloc_blocks(st.n_blocks) if st.n_blocks else []
+        if ids is None:
+            return None
+        r = Request(self._next_rid, st.arrival_s, list(st.prompt),
+                    st.max_new_tokens, cluster_id=st.cluster_id,
+                    token_seed=st.token_seed,
+                    orig_prompt_len=st.orig_prompt_len,
+                    orig_max_new_tokens=st.orig_max_new_tokens)
+        self._next_rid += 1
+        r.generated = list(st.generated)
+        r.prefill_pos = st.prefill_pos
+        r.preemptions = st.preemptions
+        r.prefill_chunks = st.prefill_chunks
+        r.first_token_s = st.first_token_s
+        r.token_times = list(st.token_times)
+        r.token_levels = list(st.token_levels)
+        r.block_write_levels = list(st.block_write_levels)
+        r.block_ids = ids
+        r.shared_blocks = 0            # migrated blocks are private copies
+        r.slot = slot
+        r.state = (RState.RUNNING if st.prefill_pos >= len(st.prompt)
+                   else RState.PREFILLING)
+        if self.ec.compute == "real" and st.k is not None and ids:
+            self.pool.scatter_blocks(ids, st.k, st.v)
+        self._slot_req[slot] = r
+        self.all_requests.append(r)
+        self._n_live += 1
+        return r
+
+    def detach_request(self, r: Request) -> None:
+        """Remove a live slot-holder whose state has been migrated out: free
+        its blocks locally (the contents were already copied to the
+        destination), open the slot, and drop it from this engine's books —
+        the importer owns the single live record from here on."""
+        self._release_blocks(r, publish=False)
+        if r.slot >= 0:
+            self._slot_req[r.slot] = None
+            r.slot = -1
+        if r in self.all_requests:
+            self.all_requests.remove(r)
+            self._n_live -= 1
+
+    def export_prefix_payload(self, entries):
+        """Host copy of cached prefix blocks (replica-crossing prefix-cache
+        lookups). Returns ``(k, v)`` — both None in simulated compute."""
+        if self.ec.compute != "real" or not entries:
+            return None, None
+        return self.pool.gather_blocks([e.block_id for e in entries])
+
+    def import_prefix_chain(self, tokens, level: int, n_blocks: int,
+                            k=None, v=None) -> int:
+        """Adopt a peer replica's cached prefix for ``tokens``: allocate
+        local blocks, scatter the migrated contents, and extend this
+        engine's radix chain at the *writer's* swap level so the next
+        admission of this prompt hits locally instead of recomputing.
+        Returns the number of blocks adopted (0 on pressure/no-op)."""
+        cache = self.prefix_cache
+        if cache is None or n_blocks <= 0:
+            return 0
+        keys = cache.chain_keys(tokens, level, n_blocks)
+        start = 0                       # skip blocks already cached here
+        while start < n_blocks and keys[start] in cache.entries:
+            start += 1
+        if start >= n_blocks:
+            return 0
+        ids = self._alloc_blocks(n_blocks - start)
+        if ids is None:
+            return 0
+        if self.ec.compute == "real" and k is not None:
+            self.pool.scatter_blocks(ids, k[:, start:],
+                                     v[:, start:] if v is not None else None)
+        prev_key = keys[start - 1] if start else None
+        adopted = 0
+        for j, i in enumerate(range(start, n_blocks)):
+            if not cache.insert(keys[i], prev_key, ids[j], level, self.now):
+                self.pool.alloc.release(ids[j:])    # chain broke: stop clean
+                break
+            adopted += 1
+            prev_key = keys[i]
+        return adopted
 
     @property
     def running(self) -> List[Request]:
@@ -465,8 +652,7 @@ class MorphServeEngine:
             if self.ec.compute == "real":
                 firsts = self._prefill_real_many(whole)
             else:
-                firsts = [int(self.rng.integers(0, self.cfg.vocab))
-                          for _ in whole]
+                firsts = [self._sim_token(r) for r in whole]
             for r, first in zip(whole, firsts):
                 r.generated.append(first)
                 r.note_prefill_levels(0, r.prompt_len, lvl, bs)
@@ -482,7 +668,7 @@ class MorphServeEngine:
             r.note_prefill_levels(pos0, pos0 + clen, lvl, bs)
             if r.prefill_pos == r.prompt_len:
                 if first is None:               # sim compute
-                    first = int(self.rng.integers(0, self.cfg.vocab))
+                    first = self._sim_token(r)
                 r.state = RState.RUNNING
                 r.generated.append(first)
                 emitted.append(r)
@@ -1015,8 +1201,7 @@ class MorphServeEngine:
                 self._decode_real(dec)
             else:
                 for r in dec:
-                    r.generated.append(
-                        int(self.rng.integers(0, self.cfg.vocab)))
+                    r.generated.append(self._sim_token(r))
         lvl = self.actuator.level
         if dec or pf_tokens:
             total_ctx = sum(r.context_len for r in dec)

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -189,6 +190,28 @@ class PagedKVPool:
             self.copies += 1
         return True
 
+    # ------------------------------------------------------------------
+    # cross-replica state transfer (request migration / prefix migration)
+    # ------------------------------------------------------------------
+    def gather_blocks(self, ids: Sequence[int]):
+        """Copy the listed blocks to host memory: ``(k, v)`` numpy arrays of
+        shape ``(L, len(ids), block_size, KVH, Dh)`` (``v`` is None for MLA
+        latent pools). This is the export half of paged-KV migration — the
+        contents travel, the ids do not (the importer allocates its own)."""
+        idx = jnp.asarray(list(ids), jnp.int32)
+        k = np.asarray(self.k[:, idx])
+        v = (np.asarray(self.v[:, idx])
+             if self.cfg.mla is None and self.v.ndim > 1 else None)
+        return k, v
+
+    def scatter_blocks(self, ids: Sequence[int], k, v=None) -> None:
+        """Write migrated block contents into freshly-allocated local ids
+        (the import half of paged-KV migration)."""
+        idx = jnp.asarray(list(ids), jnp.int32)
+        self.k = self.k.at[:, idx].set(jnp.asarray(k, self.dtype))
+        if v is not None and self.cfg.mla is None and self.v.ndim > 1:
+            self.v = self.v.at[:, idx].set(jnp.asarray(v, self.dtype))
+
 
 class PrefixCacheEntry:
     """One cached full KV block of a prompt prefix (radix-chain node)."""
@@ -290,6 +313,19 @@ class PrefixCache:
         if matched:
             self.hits += 1
             self.tokens_reused += len(matched) * self.block_size
+        return matched
+
+    def peek(self, tokens: Sequence[int], level: int,
+             max_blocks: int) -> List[PrefixCacheEntry]:
+        """Longest cached block-aligned prefix *without* pinning, touching
+        LRU stamps, or counting a lookup — the read-only probe the cluster
+        uses to decide whether a peer replica's cache is worth migrating."""
+        matched: List[PrefixCacheEntry] = []
+        for key in self.chain_keys(tokens, level, max_blocks):
+            e = self.entries.get(key)
+            if e is None:
+                break
+            matched.append(e)
         return matched
 
     def release(self, block_id: int, now: float) -> bool:

@@ -44,6 +44,9 @@ class ServingReport:
     # cluster failovers: logical requests re-dispatched after a replica
     # death, drain, or fencing (0 for single-engine runs)
     n_redispatched: int = 0
+    # cluster failovers resolved by KV migration instead of recompute
+    # re-dispatch: the request resumed mid-stream on a peer, no re-prefill
+    n_migrated: int = 0
     # shared-prefix KV cache (0/absent when the cache is off)
     prefix_hit_rate: float = 0.0
     prefill_tokens_saved: int = 0
@@ -58,7 +61,8 @@ def build_report(requests: List[Request], *, ttft_slo_s: float,
                  duration_s: float, history=None,
                  prefix_hit_rate: float = 0.0,
                  prefill_tokens_saved: int = 0,
-                 n_redispatched: int = 0) -> ServingReport:
+                 n_redispatched: int = 0,
+                 n_migrated: int = 0) -> ServingReport:
     fin = [r for r in requests if r.state == RState.FINISHED]
     failed = sum(1 for r in requests if r.state == RState.FAILED)
     hung = sum(1 for r in requests
@@ -99,5 +103,6 @@ def build_report(requests: List[Request], *, ttft_slo_s: float,
         n_failed=failed,
         n_hung=hung,
         n_redispatched=n_redispatched,
+        n_migrated=n_migrated,
         prefix_hit_rate=prefix_hit_rate,
         prefill_tokens_saved=prefill_tokens_saved)

@@ -5,6 +5,36 @@ import dataclasses
 import enum
 from typing import List, Optional
 
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    """Cheap deterministic 64-bit mixer (splitmix64 finalizer)."""
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+def sim_token(token_seed: int, position: int, vocab: int) -> int:
+    """Simulated-compute 'model': the token at absolute context position
+    ``position`` is a pure function of the request's ``token_seed``.
+
+    This is what makes failover comparable bit-for-bit: a request that is
+    preempted, re-dispatched to another replica, or migrated mid-decode
+    regenerates exactly the token stream the uninterrupted run would have
+    produced — engine-local rng state never leaks into token content."""
+    return _splitmix64(token_seed ^ _splitmix64(position)) % max(vocab, 1)
+
+
+def derive_token_seed(prompt: List[int]) -> int:
+    """Deterministic token seed from the original prompt content — the sim
+    'model identity' of a request (identical prompts generate identically)."""
+    h = 0x243F6A8885A308D3
+    for t in prompt:
+        h = _splitmix64(h ^ (int(t) & _M64))
+    return h
+
 
 class RState(enum.Enum):
     QUEUED = "queued"
@@ -52,6 +82,28 @@ class Request:
     # control plane can cap retries per *logical* request and the chaos
     # bench can assert every trace request reached a terminal state
     cluster_id: Optional[int] = None
+    # sim-compute token stream seed: fixed at first submit and preserved
+    # verbatim across preemption / re-dispatch / migration, so the logical
+    # request's token stream is a pure function of (seed, position)
+    token_seed: int = 0
+    # identity as originally submitted: preemption and re-dispatch fold
+    # generated tokens into the prompt and shrink max_new_tokens, so the
+    # originals must ride along for faithful terminal records and for
+    # reconstructing the logical token stream (prompt[orig_prompt_len:]
+    # + generated)
+    orig_prompt_len: int = -1
+    orig_max_new_tokens: int = -1
+
+    def __post_init__(self):
+        if self.orig_prompt_len < 0:
+            self.orig_prompt_len = len(self.prompt)
+        if self.orig_max_new_tokens < 0:
+            self.orig_max_new_tokens = self.max_new_tokens
+
+    def logical_stream(self) -> List[int]:
+        """Every token generated on behalf of the *logical* request,
+        including generations folded into the prompt by recompute."""
+        return list(self.prompt[self.orig_prompt_len:]) + list(self.generated)
 
     def note_prefill_levels(self, start: int, end: int, level: int,
                             block_size: int) -> None:

@@ -28,6 +28,14 @@ class TraceRequest:
     # cluster-wide logical id, assigned by the dispatcher on first dispatch
     # and preserved verbatim across re-dispatch (failover keeps identity)
     request_id: Optional[int] = None
+    # sim-compute token stream seed (None: the engine derives it from the
+    # prompt at first submit); re-dispatch must carry the original so the
+    # surviving replica continues the same logical stream
+    token_seed: Optional[int] = None
+    # original identity for re-dispatched requests whose prompt has already
+    # absorbed generated tokens (recompute policy): None on first dispatch
+    orig_prompt_len: Optional[int] = None
+    orig_max_new_tokens: Optional[int] = None
 
 
 def _lens(rng, n, p_mean, p_sigma, p_max, g_mean, g_sigma, g_max):
