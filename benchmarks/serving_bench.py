@@ -20,16 +20,29 @@ clock, paper-scale model):
   Gates: >50% prefill-token savings, hit rate above threshold, p95 TTFT
   no worse than cache-off, identical generated-token counts.
 
+* **mixed_class / flood** — SLO-class overload legs: a sustained
+  mixed-class overload trace (interactive / batch / background) and a
+  long-prompt batch flood, each replayed class-aware (deadline-slack
+  scheduler + admission control) vs the FIFO baseline. Gates:
+  class-aware interactive p95 TTFT <= 0.6x the FIFO baseline, batch
+  goodput >= 0.8x baseline, zero aged-class starvation, every shed
+  request counted exactly once, and the served token streams
+  bit-identical to the FIFO run (scheduling must change *when*, never
+  *what*, requests generate). The mixed trace is also written to
+  ``BENCH_serving_trace.json`` so a failed CI gate ships its workload.
+
 ``PYTHONPATH=src:. python benchmarks/serving_bench.py [--smoke]``
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 from repro.configs import ServingConfig, MORPH_LLAMA2_7B
 from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
-                          burstgpt_like, shared_prefix_multiturn)
+                          RState, burstgpt_like, long_prompt_flood,
+                          mixed_class_traffic, shared_prefix_multiturn)
 
 MAX_TOKENS_PER_STEP = 256
 
@@ -56,7 +69,24 @@ def make_prefix_trace(duration_s: float):
                                    vocab=MORPH_LLAMA2_7B.vocab, seed=7)
 
 
-def make_engine(policy: str, *, prefix_caching: bool = False):
+def make_mixed_trace(duration_s: float):
+    # ~3x sustained overload with the default 50/30/20 interactive/batch/
+    # background mix: FIFO interactive TTFT collapses into the tens of
+    # seconds while the class-aware scheduler holds it near its target
+    return mixed_class_traffic(duration_s=duration_s, base_rps=6.0, seed=11)
+
+
+def make_flood_trace(duration_s: float):
+    # interactive trickle + an 8 s window of long-prompt batch floods: the
+    # adversarial head-of-line case where FIFO parks interactive arrivals
+    # behind kilotoken prompts
+    return long_prompt_flood(duration_s=duration_s, base_rps=2.0,
+                             flood_start_s=4.0, flood_duration_s=8.0,
+                             flood_rps=4.0, seed=13)
+
+
+def make_engine(policy: str, *, prefix_caching: bool = False,
+                scheduler: str = "slack", admission_control: bool = False):
     sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
                        max_batch_slots=48, max_seq_len=2048,
                        swap_levels=(0, 2, 4, 8, 16), mode="performance",
@@ -66,7 +96,9 @@ def make_engine(policy: str, *, prefix_caching: bool = False):
                                          hw=NVIDIA_L4, dtype="bfloat16",
                                          seed=1,
                                          max_tokens_per_step=MAX_TOKENS_PER_STEP,
-                                         prefix_caching=prefix_caching))
+                                         prefix_caching=prefix_caching,
+                                         scheduler=scheduler,
+                                         admission_control=admission_control))
 
 
 def run_policy(policy: str, trace, *, prefix_caching: bool = False,
@@ -111,6 +143,53 @@ def leg_stats(eng, rep):
         "prefill_tokens_saved": rep.prefill_tokens_saved,
         "prefix_evicted_for_pressure": eng.prefix_evicted_for_pressure,
         "compaction_moves": eng.compaction_moves,
+        # SLO-class / admission-control observability
+        "n_shed": rep.n_shed,
+        "shed_at_submit": eng.shed_at_submit,
+        "shed_at_queue": eng.shed_at_queue,
+        "goodput_tok_s": rep.goodput_tok_s,
+        "starvation_bypasses": rep.starvation_bypasses,
+        "class_stats": rep.class_stats,
+    }
+
+
+def run_class_leg(trace, *, scheduler: str, admission_control: bool):
+    """One SLO-class leg: replay + per-rid served streams for the
+    bit-identity gate (scheduling may only change timing, never content)."""
+    eng = make_engine("morph", scheduler=scheduler,
+                      admission_control=admission_control)
+    rep = eng.run_trace(trace, max_steps=120000)
+    streams = {r.rid: tuple(r.logical_stream()) for r in eng.all_requests
+               if r.state == RState.FINISHED}
+    return eng, rep, streams
+
+
+def class_gates(prefix, on, on_rep, off_rep, streams_on, streams_off):
+    """Acceptance gates for one class-aware-vs-FIFO trace pair."""
+    ci_on = on_rep.class_stats.get("interactive", {})
+    ci_off = off_rep.class_stats.get("interactive", {})
+    cb_on = on_rep.class_stats.get("batch", {})
+    cb_off = off_rep.class_stats.get("batch", {})
+    ratio = (ci_on.get("ttft_p95", 0.0) / ci_off["ttft_p95"]
+             if ci_off.get("ttft_p95") else 1.0)
+    bg_ratio = (cb_on.get("goodput_tok_s", 0.0) / cb_off["goodput_tok_s"]
+                if cb_off.get("goodput_tok_s") else 1.0)
+    both = set(streams_on) & set(streams_off)
+    return {
+        f"{prefix}_interactive_ttft_p95_ratio": ratio,
+        f"{prefix}_interactive_ttft_le_0p6x_fifo": bool(ratio <= 0.6),
+        f"{prefix}_batch_goodput_ratio": bg_ratio,
+        f"{prefix}_batch_goodput_ge_0p8x_fifo": bool(bg_ratio >= 0.8),
+        f"{prefix}_zero_starvation": bool(
+            on_rep.starvation_bypasses == 0
+            and off_rep.starvation_bypasses == 0),
+        f"{prefix}_shed_counted_once": bool(
+            on_rep.n_shed + on_rep.n_finished + on_rep.n_failed
+            + on_rep.n_hung == on_rep.n_requests
+            and on.shed == on.shed_at_submit + on.shed_at_queue
+            == on_rep.n_shed),
+        f"{prefix}_streams_bit_identical": bool(
+            both and all(streams_on[k] == streams_off[k] for k in both)),
     }
 
 
@@ -178,6 +257,39 @@ def main(smoke: bool = False) -> dict:
         "prefix_identical_generated": bool(
             pon["context_tokens"] == poff["context_tokens"]),
     })
+    # --- SLO-class overload legs: class-aware vs FIFO --------------------
+    mixed = make_mixed_trace(duration)
+    flood = make_flood_trace(duration)
+    out["mixed_trace"] = {"kind": "mixed_class_traffic",
+                          "duration_s": duration, "n_requests": len(mixed)}
+    out["flood_trace"] = {"kind": "long_prompt_flood",
+                          "duration_s": duration, "n_requests": len(flood)}
+    # ship the adversarial workload itself: a failed CI gate uploads this
+    # so the exact trace that broke the SLO picture is reproducible
+    with open("BENCH_serving_trace.json", "w") as f:
+        json.dump({"kind": "mixed_class_traffic", "duration_s": duration,
+                   "requests": [{"arrival_s": t.arrival_s,
+                                 "prompt_len": t.prompt_len,
+                                 "max_new_tokens": t.max_new_tokens,
+                                 "slo_class": t.slo_class}
+                                for t in mixed]}, f, indent=2)
+    for prefix, trace in (("mixed", mixed), ("flood", flood)):
+        eng_on, rep_on, s_on = run_class_leg(
+            trace, scheduler="slack", admission_control=True)
+        eng_off, rep_off, s_off = run_class_leg(
+            trace, scheduler="fifo", admission_control=False)
+        for key, eng, rep in ((f"{prefix}_classaware_on", eng_on, rep_on),
+                              (f"{prefix}_classaware_off", eng_off, rep_off)):
+            out[key] = leg_stats(eng, rep)
+            s = out[key]
+            ci = s["class_stats"].get("interactive", {})
+            print(f"{key},{ci.get('ttft_p95', float('nan')):.3f},"
+                  f"{s['slo_violation_rate']:.2%},shed={s['n_shed']},"
+                  f"goodput={s['goodput_tok_s']:.0f},"
+                  f"starv={s['starvation_bypasses']}")
+        out["gates"].update(class_gates(prefix, eng_on, rep_on, rep_off,
+                                        s_on, s_off))
+
     with open("BENCH_serving.json", "w") as f:
         json.dump(out, f, indent=2)
     g = out["gates"]
@@ -185,8 +297,13 @@ def main(smoke: bool = False) -> dict:
           f"(gate: <= 1.0); degraded_tok {on['degraded_token_frac']:.2%} "
           f"(transient gate: < 0.75, final level "
           f"{on['final_swap_level']}); prefix savings {savings:.2%} "
-          f"(gate: > 0.5), hit rate {pon['prefix_hit_rate']:.2%}; "
-          f"wrote BENCH_serving.json")
+          f"(gate: > 0.5), hit rate {pon['prefix_hit_rate']:.2%}")
+    print(f"# class-aware: interactive p95 "
+          f"{g['mixed_interactive_ttft_p95_ratio']:.2f}x FIFO "
+          f"(gate: <= 0.6), batch goodput "
+          f"{g['mixed_batch_goodput_ratio']:.2f}x (gate: >= 0.8), "
+          f"flood p95 {g['flood_interactive_ttft_p95_ratio']:.2f}x; "
+          f"wrote BENCH_serving.json + BENCH_serving_trace.json")
     return out
 
 

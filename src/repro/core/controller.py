@@ -67,9 +67,17 @@ class MorphingController:
         return (self.sc.perf_kv_pressure_high
                 if self.sc.mode == "performance" else self.sc.kv_pressure_high)
 
+    def can_escalate(self) -> bool:
+        """True while a deeper relief level remains — the admission
+        controller treats this as headroom and defers shedding to it."""
+        return self._next_up(self.level) != self.level
+
     def decide(self, signals: Dict[str, float]) -> Optional[MorphCommand]:
         kv = signals.get("kv_usage", 0.0)
-        qd = signals.get("queue_delay", 0.0)
+        # class-weighted queue pressure when the engine reports it (the
+        # interactive backlog escalates relief at full weight, offline
+        # classes discounted); plain oldest-wait otherwise
+        qd = signals.get("urgent_delay", signals.get("queue_delay", 0.0))
         now = signals.get("time_s", 0.0)
         high = kv > self.high_watermark() or qd > self.sc.queue_delay_high_s
         low = (kv < self.sc.kv_pressure_low

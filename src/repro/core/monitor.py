@@ -34,6 +34,11 @@ class Telemetry:
     # shared-prefix cache residency (blocks counted in kv_used_blocks that
     # are idle cached prefixes, reclaimable on demand)
     prefix_cached_blocks: int = 0
+    # class-weighted queue pressure: max over arrived queued requests of
+    # wait_s * SLOClass.pressure_weight — interactive backlog counts full
+    # weight (escalates morph relief as before), batch/background waits are
+    # discounted so offline backlog alone doesn't burn relief budget
+    urgent_wait_s: float = 0.0
 
     @property
     def kv_usage(self) -> float:
@@ -46,6 +51,7 @@ class ServingMonitor:
         self.alpha = ewma_alpha
         self.kv_usage = 0.0
         self.queue_delay = 0.0
+        self.urgent_delay = 0.0
         self.queue_len = 0.0
         self.tpot = 0.0
         self.history: List[Telemetry] = []
@@ -56,6 +62,7 @@ class ServingMonitor:
         a = self.alpha
         self.kv_usage = (1 - a) * self.kv_usage + a * t.kv_usage
         self.queue_delay = (1 - a) * self.queue_delay + a * t.oldest_wait_s
+        self.urgent_delay = (1 - a) * self.urgent_delay + a * t.urgent_wait_s
         self.queue_len = (1 - a) * self.queue_len + a * t.queue_len
         self.history.append(t)
 
@@ -71,5 +78,6 @@ class ServingMonitor:
     def signals(self) -> Dict[str, float]:
         return {"kv_usage": self.kv_usage,
                 "queue_delay": self.queue_delay,
+                "urgent_delay": self.urgent_delay,
                 "queue_len": self.queue_len,
                 "tpot": self.tpot}

@@ -60,7 +60,7 @@ from repro.distributed.migration import MigrationChannel, MigrationConfig
 from repro.engine.engine import EngineConfig, MorphServeEngine
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import Request, RState
-from repro.engine.traces import TraceRequest
+from repro.engine.traces import DEFAULT_SLO_CLASS, SLO_CLASSES, TraceRequest
 
 
 @dataclasses.dataclass
@@ -80,7 +80,7 @@ class FaultEvent:
 DEFAULT_ROUTE_WEIGHTS = {"depth": 1.0, "pool": 4.0, "level": 2.0,
                          "backlog": 0.5, "step_time": 2.0}
 
-_TERMINAL = (RState.FINISHED, RState.FAILED)
+_TERMINAL = (RState.FINISHED, RState.FAILED, RState.SHED)
 
 
 @dataclasses.dataclass
@@ -145,6 +145,7 @@ class ServingCluster:
         self.archived_requests: List[Request] = []
         self.archived_history: List = []
         self.failed_records: List[Request] = []
+        self.archived_starvation = 0   # bypass counters of fenced engines
 
     def _make_engine(self, i: int) -> MorphServeEngine:
         inj = (self.fault_plan.for_replica(i)
@@ -162,7 +163,14 @@ class ServingCluster:
         return [i for i, r in enumerate(self.replicas)
                 if r.alive and not r.drained and r.engine is not None]
 
-    def _route_score(self, i: int) -> float:
+    def _route_score(self, i: int, urgency: float = 1.0) -> float:
+        """Routing score for replica ``i`` (lowest wins). ``urgency`` is the
+        request's SLO-class pressure weight: the *degradation* terms (pool
+        pressure, swap level, step time) are scaled by it, so a degraded
+        replica sheds interactive load first while batch/background traffic
+        still fills it — its capacity isn't wasted, just reserved for work
+        that can tolerate it. Interactive (weight 1.0) scores exactly as
+        before."""
         e = self.replicas[i].engine
         depth = len(e.queue) + len(e.running)
         pool = e.pool.usage()
@@ -174,14 +182,21 @@ class ServingCluster:
         step_t = (e.monitor.history[-1].step_time_s
                   if e.monitor.history else 0.0)
         w = self.route_weights
-        return (w["depth"] * depth + w["pool"] * pool + w["level"] * level
-                + w["backlog"] * backlog_steps + w["step_time"] * step_t)
+        return (w["depth"] * depth + w["backlog"] * backlog_steps
+                + urgency * (w["pool"] * pool + w["level"] * level
+                             + w["step_time"] * step_t))
 
-    def _route(self, exclude: Optional[int] = None) -> Optional[int]:
+    def _route(self, exclude: Optional[int] = None,
+               urgency: float = 1.0) -> Optional[int]:
         live = [i for i in self._live() if i != exclude]
         if not live:
             return None
-        return min(live, key=lambda i: (self._route_score(i), i))
+        return min(live, key=lambda i: (self._route_score(i, urgency), i))
+
+    @staticmethod
+    def _urgency(slo_class: str) -> float:
+        slo = SLO_CLASSES.get(slo_class, SLO_CLASSES[DEFAULT_SLO_CLASS])
+        return slo.pressure_weight
 
     def dispatch(self, tr: TraceRequest) -> None:
         if tr.request_id is None:
@@ -196,7 +211,7 @@ class ServingCluster:
             tr = dataclasses.replace(tr, prompt_tokens=tuple(
                 int(t) for t in prng.integers(0, self.cfg.vocab,
                                               size=tr.prompt_len)))
-        tgt = self._route()
+        tgt = self._route(urgency=self._urgency(tr.slo_class))
         if tgt is None:
             self.pending.append(tr)
             return
@@ -253,7 +268,7 @@ class ServingCluster:
         e_src = self.replicas[src].engine
         if e_src is None:
             return False
-        tgt = self._route(exclude=src)
+        tgt = self._route(exclude=src, urgency=self._urgency(q.slo_class))
         if tgt is None:
             return False
         st = e_src.export_request_state(q)
@@ -370,12 +385,14 @@ class ServingCluster:
                 max_new_tokens=q.orig_max_new_tokens, state=RState.FAILED,
                 cluster_id=cid, token_seed=q.token_seed,
                 orig_prompt_len=q.orig_prompt_len,
-                orig_max_new_tokens=q.orig_max_new_tokens))
+                orig_max_new_tokens=q.orig_max_new_tokens,
+                slo_class=q.slo_class))
             return
         self.dispatch(TraceRequest(q.arrival_s, len(prompt), rem, prompt,
                                    request_id=cid, token_seed=q.token_seed,
                                    orig_prompt_len=q.orig_prompt_len,
-                                   orig_max_new_tokens=q.orig_max_new_tokens))
+                                   orig_max_new_tokens=q.orig_max_new_tokens,
+                                   slo_class=q.slo_class))
 
     def _harvest_and_discard(self, i: int) -> None:
         """Fence a dead/partitioned replica: keep its FINISHED/FAILED
@@ -386,12 +403,19 @@ class ServingCluster:
         the engine."""
         e = self.replicas[i].engine
         src = i if self.replicas[i].alive else None
+        # a partitioned replica is still `alive` with a live engine here, so
+        # without this the dispatcher can route evacuated work *back* onto
+        # the replica being fenced — the record then dies with the engine
+        # (silent request loss). Pull it from the rotation first; the
+        # restart path clears the flag on rejoin.
+        self.replicas[i].drained = True
         for q in list(e.all_requests):
             if q.state in _TERMINAL:
                 self.archived_requests.append(q)
             else:
                 self._redispatch_live(q, src=src)
         self.archived_history.extend(e.monitor.history)
+        self.archived_starvation += e.starvation_bypasses
         self.replicas[i].engine = None
 
     def _detect_and_recover(self) -> None:
@@ -507,7 +531,8 @@ class ServingCluster:
             reqs.append(Request(rid=-1, arrival_s=tr.arrival_s, prompt=[],
                                 max_new_tokens=tr.max_new_tokens,
                                 state=RState.QUEUED,
-                                cluster_id=tr.request_id))
+                                cluster_id=tr.request_id,
+                                slo_class=tr.slo_class))
         return reqs
 
     def collect_history(self) -> List:
@@ -575,4 +600,8 @@ class ServingCluster:
                             duration_s=max(self.now, 1e-9),
                             history=self.collect_history(),
                             n_redispatched=self.redispatched,
-                            n_migrated=self.migrations_ok)
+                            n_migrated=self.migrations_ok,
+                            starvation_bypasses=self.archived_starvation
+                            + sum(r.engine.starvation_bypasses
+                                  for r in self.replicas
+                                  if r.engine is not None))

@@ -6,6 +6,11 @@ from repro.engine.cost_model import (CostModel, HardwareProfile, NVIDIA_L4,
                                      NVIDIA_A100_80G, TPU_V5E, PROFILES)
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import Request, RState
-from repro.engine.traces import (TraceRequest, azure_like, burstgpt_like,
-                                 constant_rate, shared_prefix_multiturn,
+from repro.engine.traces import (TraceRequest, SLOClass, SLO_CLASSES,
+                                 DEFAULT_SLO_CLASS, azure_like,
+                                 burstgpt_like, constant_rate,
+                                 shared_prefix_multiturn,
+                                 mixed_class_traffic, diurnal_ramp,
+                                 long_prompt_flood,
+                                 multi_tenant_prefix_pollution,
                                  TRACES)

@@ -143,6 +143,28 @@ class CostModel:
         t_mem = (weight_bytes + kv_read) / self.hw.hbm_bw
         return max(t_compute, t_mem) + self.fixed_overhead_s
 
+    def queue_delay_estimate(self, backlog_tokens: int, tokens_per_step: int,
+                             decode_batch: int = 0,
+                             decode_ctx_tokens: int = 0,
+                             weight_bytes: float = 0.0) -> float:
+        """Estimated seconds until ``backlog_tokens`` of queued prefill work
+        clears at the live per-step token budget, with ``decode_batch``
+        running decodes sharing every step.
+
+        This is the admission controller's crystal ball: a request whose
+        class deadline falls inside this estimate (with no morph-relief
+        headroom left) is shed at the front door instead of timing out
+        silently. Monotone in ``backlog_tokens`` by construction — more
+        backlog can never yield a smaller estimate (pinned by tests)."""
+        if backlog_tokens <= 0:
+            return 0.0
+        per = max(int(tokens_per_step), 1)
+        steps = -(-backlog_tokens // per)
+        chunk = min(backlog_tokens, per)
+        dt = self.mixed_step_time(decode_batch, decode_ctx_tokens, chunk,
+                                  chunk * chunk / 2, 0, weight_bytes)
+        return steps * dt
+
     def kv_migration_bytes(self, n_blocks: int,
                            compress_ratio: float = 1.0) -> int:
         """Wire bytes for ``n_blocks`` paged-KV blocks (all layers, k+v),

@@ -33,7 +33,8 @@ from repro.engine.kv_cache import PagedKVPool, PrefixCache, kv_block_bytes
 from repro.engine.metrics import ServingReport, build_report
 from repro.engine.request import (Request, RState, derive_token_seed,
                                   sim_token)
-from repro.engine.traces import TraceRequest
+from repro.engine.traces import (DEFAULT_SLO_CLASS, SLO_CLASSES, SLOClass,
+                                 TraceRequest)
 from repro.models import lm
 
 
@@ -70,6 +71,10 @@ class RequestKVState:
     n_blocks: int
     k: Optional[np.ndarray] = None
     v: Optional[np.ndarray] = None
+    # SLO class + first-schedule stamp ride along so the importer's
+    # scheduler/preemption decisions and per-class accounting stay truthful
+    slo_class: str = DEFAULT_SLO_CLASS
+    sched_first_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -136,6 +141,25 @@ class EngineConfig:
     # prefix-cache refcounts, and the live-request counter; violations are
     # repaired in place (graceful degradation) instead of crashing mid-trace
     watchdog_interval: int = 16
+    # --- SLO-class-aware scheduling / admission control -------------------
+    # admission ordering policy:
+    #   "slack" — deadline-slack priority: arrived requests are ordered by
+    #     least slack first (class TTFT deadline minus now minus an
+    #     estimated service time), with starvation-bounded aging lifting
+    #     batch/background work that has waited past its class's
+    #     age_after_s until it outranks fresh interactive arrivals. For a
+    #     single-class trace with equal-length prompts this degenerates to
+    #     exact FIFO order.
+    #   "fifo" — the seed's arrival-order admission (per-class targets and
+    #     shedding still apply when admission_control is on).
+    scheduler: str = "slack"
+    # explicit overload admission control: shed a request terminally
+    # (RState.SHED, counted once) at submit/queue-head when its class
+    # deadline is already unmeetable, or when the CostModel's queue-delay
+    # estimate blows the deadline and no morph-relief headroom (deeper swap
+    # level / in-flight relief) remains. Off by default: shedding changes
+    # workload outcomes, so benches/serving opt in explicitly.
+    admission_control: bool = False
 
 
 class MorphServeEngine:
@@ -245,6 +269,16 @@ class MorphServeEngine:
         self._n_live = 0          # requests in QUEUED/PREFILLING/RUNNING/PREEMPTED
         self.rejected = 0
         self.failed = 0           # terminal FAILED (unservable; incl. rejects)
+        # --- overload admission control -----------------------------------
+        self.shed = 0             # terminal SHED outcomes (counted once each)
+        self.shed_at_submit = 0   # refused at the front door
+        self.shed_at_queue = 0    # refused at queue-head / deadline sweep
+        # scheduler liveness invariant (CI-gated zero): an *aged*
+        # batch/background request passed over while a later candidate was
+        # admitted in the same scheduling round — by construction the
+        # admission loop never skips a live candidate, so any increment is
+        # a starvation bug
+        self.starvation_bypasses = 0
         self.resize_log: List = []
         # --- shared-prefix KV cache (attention/MLA archs only: SSM has no
         # paged KV to share, and whole-prompt-only paths can't start a
@@ -291,7 +325,8 @@ class MorphServeEngine:
                     orig_prompt_len=(-1 if tr.orig_prompt_len is None
                                      else tr.orig_prompt_len),
                     orig_max_new_tokens=(-1 if tr.orig_max_new_tokens is None
-                                         else tr.orig_max_new_tokens))
+                                         else tr.orig_max_new_tokens),
+                    slo_class=tr.slo_class)
         self._next_rid += 1
         self.all_requests.append(r)
         # reject requests that can never fit (block table or max-grown pool)
@@ -303,7 +338,17 @@ class MorphServeEngine:
             self.rejected += 1
             self.failed += 1
             return r
-        self.queue.append(r)
+        # front-door admission control: only for requests submitted *live*
+        # (arrival not in the future — trace replay pre-submits the whole
+        # trace, where the queue ahead will have drained by arrival time;
+        # those are checked at queue-head instead)
+        if (self.ec.admission_control and tr.arrival_s <= self.now
+                and self._should_shed(r)):
+            r.state = RState.SHED
+            self.shed += 1
+            self.shed_at_submit += 1
+            return r
+        self._enqueue(r)
         self._n_live += 1
         return r
 
@@ -313,6 +358,143 @@ class MorphServeEngine:
         so preemption, re-dispatch, and mid-decode migration all regenerate
         the exact stream the uninterrupted run would have produced."""
         return sim_token(r.token_seed, r.context_len, self.cfg.vocab)
+
+    # ------------------------------------------------------------------
+    # SLO-class-aware scheduling / admission control
+    # ------------------------------------------------------------------
+    def _slo(self, r: Request) -> SLOClass:
+        return SLO_CLASSES.get(r.slo_class, SLO_CLASSES[DEFAULT_SLO_CLASS])
+
+    def _enqueue(self, r: Request, *, front: bool = False) -> None:
+        """THE queue-insert point: the wait queue is kept sorted by
+        (arrival_s, rid) at all times, so FIFO admission's future-arrival
+        skip and ``release_queued``'s hand-off order stay well-defined even
+        after redispatch/migration deliver out-of-order arrivals.
+
+        ``front=True`` is the one sanctioned exception — a preempted
+        request already delivered tokens, so resuming it first bounds its
+        mid-stream stall (the seed's ``appendleft`` semantics)."""
+        q = self.queue
+        if front or not q:
+            q.appendleft(r) if front else q.append(r)
+            return
+        key = (r.arrival_s, r.rid)
+        if (q[-1].arrival_s, q[-1].rid) <= key:
+            q.append(r)
+            return
+        i = len(q)
+        while i > 0 and (q[i - 1].arrival_s, q[i - 1].rid) > key:
+            i -= 1
+        q.insert(i, r)
+
+    def _slack(self, r: Request) -> float:
+        """Deadline slack in seconds: time to the class's first-token target
+        minus an estimated service time — least slack schedules first.
+        Starvation-bounded aging: once an ageing-class request has waited
+        past ``age_after_s``, its slack shrinks ``aging_rate``x faster than
+        real time, so it monotonically overtakes fresh interactive work."""
+        slo = self._slo(r)
+        est = self.cost.prefill_time(max(r.prefill_remaining, 1))
+        slack = (r.arrival_s + slo.ttft_slo_s) - self.now - est
+        if slo.age_after_s > 0:
+            over = (self.now - r.arrival_s) - slo.age_after_s
+            if over > 0:
+                r.aged = True
+                slack -= over * slo.aging_rate
+        return slack
+
+    def _class_key(self, r: Request):
+        """Preemption-victim ordering: background first (largest TTFT
+        target), interactive last; within a class, latest arrival (highest
+        rid) first — for single-class traffic this is exactly the seed's
+        highest-rid victim selection."""
+        return (self._slo(r).ttft_slo_s, r.rid)
+
+    def _relief_headroom(self) -> bool:
+        """True while morphing can still relieve pressure (a deeper swap
+        level remains, or a relief swap is in flight) — the admission
+        controller defers shedding to the morph ladder until it's spent."""
+        if self._pinned_level is not None:
+            return False
+        return self.actuator.busy or self.controller.can_escalate()
+
+    def _est_queue_delay(self, r: Optional[Request] = None) -> float:
+        """CostModel estimate of seconds until the prefill backlog *ahead of*
+        ``r`` clears at the live chunk budget, with the running decodes
+        sharing every step. "Ahead" follows the admission policy: everything
+        already-arrived that outranks ``r`` (earlier arrival under FIFO,
+        smaller slack under the deadline scheduler) plus in-flight chunked
+        prefills — an interactive request does not wait behind background
+        work the scheduler would serve after it. ``r=None`` estimates the
+        whole arrived backlog."""
+        backlog = sum(q.prefill_remaining for q in self.running
+                      if q.state == RState.PREFILLING)
+        arrived = [q for q in self.queue
+                   if q.arrival_s <= self.now and q is not r]
+        if r is None:
+            ahead = arrived
+        elif self.ec.scheduler == "fifo":
+            ahead = [q for q in arrived
+                     if (q.arrival_s, q.rid) < (r.arrival_s, r.rid)]
+        else:
+            sr = self._slack(r)
+            ahead = [q for q in arrived
+                     if (self._slack(q), q.rid) < (sr, r.rid)]
+        backlog += sum(q.prefill_remaining for q in ahead)
+        dec = self.decoding
+        return self.cost.queue_delay_estimate(
+            backlog, self.chunk_budget, len(dec),
+            sum(q.context_len for q in dec),
+            self.plan.weight_bytes(self.actuator.level))
+
+    def _should_shed(self, r: Request) -> bool:
+        """Terminal-shed decision for a never-scheduled request: its class
+        deadline is factually unmeetable (even starting now, service alone
+        blows it), or the estimated delay behind higher-priority work blows
+        it with no morph-relief headroom left to falsify the estimate."""
+        slo = self._slo(r)
+        deadline = r.arrival_s + slo.deadline_s
+        service = self.cost.prefill_time(max(r.prefill_remaining, 1))
+        if self.now + service > deadline:
+            return True                       # already blown — don't pretend
+        if self._relief_headroom():
+            return False
+        return self.now + self._est_queue_delay(r) + service > deadline
+
+    def _shed(self, r: Request, *, at_submit: bool = False) -> None:
+        """Count one terminal SHED outcome. Only never-scheduled QUEUED
+        requests are sheddable — a request that already holds delivered
+        tokens is past the front door and runs to completion or failure."""
+        if r in self.queue:
+            self.queue.remove(r)
+        r.state = RState.SHED
+        self._n_live -= 1
+        self.shed += 1
+        if at_submit:
+            self.shed_at_submit += 1
+        else:
+            self.shed_at_queue += 1
+
+    def _sweep_blown_deadlines(self) -> None:
+        """Shed every arrived, never-scheduled request whose class deadline
+        can no longer be met — timely SHED records instead of silent
+        timeouts deep in the queue."""
+        for r in [q for q in self.queue
+                  if q.arrival_s <= self.now and q.state == RState.QUEUED
+                  and q.sched_first_s is None]:
+            if self._should_shed(r):
+                self._shed(r)
+
+    def _admission_order(self) -> List[Request]:
+        """This step's admission candidates: arrived requests only (a
+        future-dated entry — possible after redispatch/migration interleave
+        arrivals — must never stall the prefill budget behind it), in
+        arrival order for the FIFO policy or least-slack-first for the
+        deadline scheduler."""
+        arrived = [r for r in self.queue if r.arrival_s <= self.now]
+        if self.ec.scheduler == "fifo" or len(arrived) <= 1:
+            return arrived
+        return sorted(arrived, key=lambda r: (self._slack(r), r.rid))
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self._slot_req):
@@ -328,7 +510,13 @@ class MorphServeEngine:
         the caller for re-dispatch elsewhere — the drain-handoff entry point.
         The live-counter invariant the watchdog audits stays maintained
         *inside* the engine (this replaces the cluster's private-field
-        surgery on ``queue`` / ``all_requests`` / ``_n_live``)."""
+        surgery on ``queue`` / ``all_requests`` / ``_n_live``).
+
+        The hand-off is *normalized* to (arrival_s, rid) order regardless of
+        internal queue state (preempted requests ride at the front; past
+        redispatch bugs interleaved arrivals), so the receiving dispatcher
+        re-dispatches deterministically and a future-dated arrival can
+        never end up queued ahead of due work on the destination."""
         out: List[Request] = []
         while self.queue:
             q = self.queue.popleft()
@@ -336,7 +524,7 @@ class MorphServeEngine:
                 self.all_requests.remove(q)
             self._n_live -= 1
             out.append(q)
-        return out
+        return sorted(out, key=lambda q: (q.arrival_s, q.rid))
 
     def export_request_state(self, r: Request) -> Optional[RequestKVState]:
         """Gather a live slot-holder's state to host: scheduling/identity
@@ -359,6 +547,7 @@ class MorphServeEngine:
             orig_max_new_tokens=r.orig_max_new_tokens,
             token_seed=r.token_seed, prefill_pos=r.prefill_pos,
             preemptions=r.preemptions, prefill_chunks=r.prefill_chunks,
+            slo_class=r.slo_class, sched_first_s=r.sched_first_s,
             first_token_s=r.first_token_s,
             token_times=list(r.token_times),
             token_levels=list(r.token_levels),
@@ -384,8 +573,10 @@ class MorphServeEngine:
                     st.max_new_tokens, cluster_id=st.cluster_id,
                     token_seed=st.token_seed,
                     orig_prompt_len=st.orig_prompt_len,
-                    orig_max_new_tokens=st.orig_max_new_tokens)
+                    orig_max_new_tokens=st.orig_max_new_tokens,
+                    slo_class=st.slo_class)
         self._next_rid += 1
+        r.sched_first_s = st.sched_first_s
         r.generated = list(st.generated)
         r.prefill_pos = st.prefill_pos
         r.preemptions = st.preemptions
@@ -509,10 +700,13 @@ class MorphServeEngine:
 
     def _grow_blocks(self, r: Request, need: int) -> bool:
         """Extend ``r``'s block table to ``need`` blocks, preempting only
-        later-arrived (higher-rid) slot occupants under memory pressure.
-        Returns False when ``r`` must stall this step instead. Transient
-        (injected) allocation failures are ridden out with a bounded
-        stall-and-retry before they escalate to preemption."""
+        lower-priority slot occupants under memory pressure — lower SLO
+        class first (background before batch before interactive), newest
+        rid first within a class; for uniform-class traffic this is exactly
+        the seed's later-arrived (higher-rid) victim order. Returns False
+        when ``r`` must stall this step instead. Transient (injected)
+        allocation failures are ridden out with a bounded stall-and-retry
+        before they escalate to preemption."""
         while need > len(r.block_ids):
             got = self._alloc_blocks(1)
             if got is None:
@@ -521,10 +715,11 @@ class MorphServeEngine:
                     r.alloc_retries += 1
                     self.alloc_fault_stalls += 1
                     return False          # stall; retried next step
-                cands = [q for q in self.running if q.rid > r.rid]
+                cands = [q for q in self.running
+                         if self._class_key(q) > self._class_key(r)]
                 if not cands:
                     return False
-                self._preempt(max(cands, key=lambda q: q.rid))
+                self._preempt(max(cands, key=self._class_key))
                 continue
             r.alloc_retries = 0
             r.block_ids.extend(got)
@@ -533,15 +728,19 @@ class MorphServeEngine:
     def _schedule_prefill(self):
         """Pick this step's prefill work under the live token budget.
 
-        Chunk continuations (oldest rid first) come before new admissions so
-        started prompts reach their first token early; admissions from the
-        FIFO head take the whole prompt when it fits the leftover budget and
-        start a chunked prefill otherwise. Returns ``(whole, chunks)`` —
+        Chunk continuations (class priority, then oldest rid) come before
+        new admissions so started prompts reach their first token early;
+        admissions are taken in ``_admission_order`` — arrival order (FIFO
+        policy) or least-deadline-slack with starvation-bounded aging — and
+        take the whole prompt when it fits the leftover budget, starting a
+        chunked prefill otherwise. Under admission control, requests whose
+        class deadline is unmeetable are shed terminally before admission
+        instead of timing out silently. Returns ``(whole, chunks)`` —
         whole-prompt admissions and ``(request, pos0, chunk_len)`` items."""
         budget = self._prefill_token_budget()
         whole: List[Request] = []
         chunks: List = []
-        for r in sorted(self.running, key=lambda q: q.rid):
+        for r in sorted(self.running, key=self._class_key):
             if budget <= 0:
                 break
             if r.state != RState.PREFILLING:
@@ -556,18 +755,19 @@ class MorphServeEngine:
                 continue                       # stalled on memory this step
             chunks.append((r, r.prefill_pos, clen))
             budget -= clen
+        if self.ec.admission_control:
+            self._sweep_blown_deadlines()
         n_admit = 0
-        while (self.queue and budget > 0
-               and n_admit < self.ec.max_prefills_per_step):
-            r = self.queue[0]
-            if r.arrival_s > self.now:
+        skipped_aged = 0
+        for r in self._admission_order():
+            if budget <= 0 or n_admit >= self.ec.max_prefills_per_step:
                 break
             # a prompt whose decode-time block table can never fit is
             # unservable — fail it terminally instead of parking it at the
-            # FIFO head forever and starving every later arrival (the
+            # queue head forever and starving every later arrival (the
             # oversized-prompt head-of-line wedge, ISSUE 5)
             if self.pool.blocks_for(r.prompt_len + 1) > self.max_nb:
-                self.queue.popleft()
+                self.queue.remove(r)
                 r.state = RState.FAILED
                 self._n_live -= 1
                 self.failed += 1
@@ -595,7 +795,7 @@ class MorphServeEngine:
                     for e in cached:
                         self.prefix_cache.release(e.block_id, self.now)
                     break                               # memory pressure
-                self.queue.popleft()
+                self.queue.remove(r)
                 r.slot = slot
                 r.block_ids = [e.block_id for e in cached] + extra
                 r.shared_blocks = len(cached)
@@ -620,7 +820,7 @@ class MorphServeEngine:
                 ids = self._alloc_blocks(nb)
                 if ids is None:
                     break                               # memory pressure
-                self.queue.popleft()
+                self.queue.remove(r)
                 r.slot, r.block_ids, r.state = slot, ids, RState.RUNNING
                 r.prefill_pos = r.prompt_len
                 self._slot_req[slot] = r
@@ -631,12 +831,19 @@ class MorphServeEngine:
                 ids = self._alloc_blocks(self.pool.blocks_for(clen))
                 if ids is None:
                     break
-                self.queue.popleft()
+                self.queue.remove(r)
                 r.slot, r.block_ids, r.state = slot, ids, RState.PREFILLING
                 r.prefill_pos = 0
                 self._slot_req[slot] = r
                 chunks.append((r, 0, clen))
                 budget -= clen
+            # starvation audit: admitting past a live aged candidate would
+            # be a bypass. The loop admits strictly in priority order and
+            # *breaks* (never skips) on slot/memory shortage, so this stays
+            # zero by construction — CI gates that it does.
+            self.starvation_bypasses += skipped_aged
+            if r.sched_first_s is None:
+                r.sched_first_s = self.now
             n_admit += 1
         return whole, chunks
 
@@ -751,7 +958,10 @@ class MorphServeEngine:
         consecutive misses does it escalate to the preemption path. Returns
         the stalled requests."""
         stalled: List[Request] = []
-        for r in sorted(self.running, key=lambda r: r.rid):
+        # class priority order: interactive sequences secure their next
+        # block first, so under exhaustion the victim pool still contains
+        # every lower class (uniform-class: exact seed rid order)
+        for r in sorted(self.running, key=self._class_key):
             if r.state != RState.RUNNING:
                 continue          # preempted by an earlier victim selection
             need = self.pool.blocks_for(r.context_len + 1)
@@ -764,7 +974,10 @@ class MorphServeEngine:
                         self.alloc_fault_stalls += 1
                         stalled.append(r)
                         break
-                    victim = max(self.running, key=lambda q: q.rid)
+                    # evict the lowest-priority slot holder: background
+                    # before batch before interactive, newest rid within a
+                    # class — interactive is preempted only by interactive
+                    victim = max(self.running, key=self._class_key)
                     self._preempt(victim)
                     if victim is r:
                         break
@@ -842,7 +1055,7 @@ class MorphServeEngine:
             self.livelock_failures += 1
             return
         r.state = RState.PREEMPTED
-        self.queue.appendleft(r)
+        self._enqueue(r, front=True)
 
     def _decode_real(self, run: List[Request]) -> None:
         bs = self.pool.block_size
@@ -1245,6 +1458,12 @@ class MorphServeEngine:
                 self.decode_stall_steps += 1
         oldest = min((r.arrival_s for r in self.queue
                       if r.arrival_s <= self.now), default=None)
+        # class-weighted queue pressure: interactive waits count at full
+        # weight, offline classes discounted — with an all-interactive
+        # queue this equals oldest_wait_s exactly
+        urgent = max(((self.now - r.arrival_s) * self._slo(r).pressure_weight
+                      for r in self.queue if r.arrival_s <= self.now),
+                     default=0.0)
         backlog = sum(r.prefill_remaining for r in self.running
                       if r.state == RState.PREFILLING) + \
             sum(r.prompt_len for r in self.queue if r.arrival_s <= self.now)
@@ -1262,7 +1481,8 @@ class MorphServeEngine:
             prefill_backlog_tokens=backlog,
             chunk_budget=self.chunk_budget,
             prefix_cached_blocks=(self.prefix_cache.resident_blocks
-                                  if self.prefix_cache is not None else 0)))
+                                  if self.prefix_cache is not None else 0),
+            urgent_wait_s=urgent))
         self._step_idx += 1
         if self.ec.watchdog_interval > 0 \
                 and self._step_idx % self.ec.watchdog_interval == 0:
@@ -1276,7 +1496,7 @@ class MorphServeEngine:
         for tr in trace:
             self.submit(tr)
         self.queue = collections.deque(
-            sorted(self.queue, key=lambda r: r.arrival_s))
+            sorted(self.queue, key=lambda r: (r.arrival_s, r.rid)))
         end = horizon_s if horizon_s is not None else \
             (max(tr.arrival_s for tr in trace) + 1e9)
         steps = 0
@@ -1296,9 +1516,10 @@ class MorphServeEngine:
             for t in r.tpots():
                 self.monitor.record_tpot(t)
         admitted = max(sum(1 for r in self.all_requests
-                           if r.state != RState.FAILED), 1)
+                           if r.state not in (RState.FAILED, RState.SHED)), 1)
         return build_report(self.all_requests, ttft_slo_s=self.sc.ttft_slo_s,
                             duration_s=dur, history=self.monitor.history,
                             prefix_hit_rate=self.prefix_hit_requests
                             / admitted,
-                            prefill_tokens_saved=self.prefill_tokens_saved)
+                            prefill_tokens_saved=self.prefill_tokens_saved,
+                            starvation_bypasses=self.starvation_bypasses)

@@ -43,6 +43,11 @@ class RState(enum.Enum):
     PREEMPTED = "preempted"          # blocks freed; must re-prefill
     FINISHED = "finished"
     FAILED = "failed"                # terminal: rejected / unservable
+    # terminal: refused by admission control under overload — the estimated
+    # queue delay exceeded the request's class deadline with no morph-relief
+    # headroom left, so the engine said "no" at the front door instead of
+    # letting the request time out silently in the queue
+    SHED = "shed"
 
 
 @dataclasses.dataclass
@@ -93,6 +98,19 @@ class Request:
     # + generated)
     orig_prompt_len: int = -1
     orig_max_new_tokens: int = -1
+    # SLO class name (keys traces.SLO_CLASSES): drives deadline-slack
+    # ordering, admission control, preemption victim selection, and
+    # per-class reporting
+    slo_class: str = "interactive"
+    # starvation-bounded aging: set once the request's queue wait crosses
+    # its class's age_after_s — from then on its priority rises until it
+    # outranks fresh interactive work (the scheduler gates on never
+    # bypassing an aged request)
+    aged: bool = False
+    # first time the scheduler gave this request prefill work (slot +
+    # blocks) — per-class queue-wait accounting; preserved across
+    # preemption (unlike prefill_pos)
+    sched_first_s: Optional[float] = None
 
     def __post_init__(self):
         if self.orig_prompt_len < 0:

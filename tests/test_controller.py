@@ -121,3 +121,24 @@ def test_low_at_level_zero_restores_chunk_budget_only():
     cmd = c.decide(sig(sc.kv_pressure_low / 2, now=5.0, chunk_frac=0.5))
     assert cmd is not None and cmd.target_level == 0
     assert cmd.grow_chunk and not cmd.shrink_kv and not cmd.grow_kv
+
+
+def test_urgent_delay_overrides_queue_delay_signal():
+    # class-weighted pressure: the controller thresholds on urgent_delay
+    # when present — a discounted (background-only) backlog must not burn
+    # relief budget, while an interactive backlog escalates as before
+    c, sc = make_controller()
+    high_qd = sc.queue_delay_high_s * 4
+    s = sig(0.0, now=0.0, qd=high_qd, qlen=4)
+    s["urgent_delay"] = high_qd * 0.1          # background-discounted wait
+    assert c.decide(s) is None, \
+        "discounted offline backlog escalated the swap level"
+    s["urgent_delay"] = high_qd                # interactive backlog
+    cmd = c.decide(s)
+    assert cmd is not None and cmd.target_level > 0
+
+
+def test_missing_urgent_delay_falls_back_to_queue_delay():
+    c, sc = make_controller()
+    cmd = c.decide(sig(0.0, now=0.0, qd=sc.queue_delay_high_s * 4, qlen=4))
+    assert cmd is not None and cmd.target_level > 0

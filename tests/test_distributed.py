@@ -131,6 +131,50 @@ def test_heartbeat_partition_fenced_and_rejoins():
     assert rep.n_requests == len(trace) and rep.n_hung == 0
 
 
+def test_release_queued_normalizes_handoff_order():
+    # drain handoff must deliver queued work sorted by (arrival, rid) no
+    # matter how preemption/redispatch scrambled the source queue
+    cl = make_cluster(2)
+    e = cl.replicas[0].engine
+    a = e.submit(TraceRequest(3.0, 32, 4))
+    b = e.submit(TraceRequest(1.0, 32, 4))
+    c = e.submit(TraceRequest(2.0, 32, 4))
+    # scramble: emulate the preemption front-insert exception
+    e.queue.remove(a)
+    e.queue.appendleft(a)
+    out = e.release_queued()
+    assert [q.rid for q in out] == [b.rid, c.rid, a.rid]
+    assert not e.queue and e._n_live == 0
+
+
+def test_redispatched_future_arrival_does_not_wedge_destination():
+    # a queued request with a future arrival handed over by drain must not
+    # park at the destination's queue head and stall due work behind it
+    cl = make_cluster(2)
+    dst = cl.replicas[1].engine
+    dst.now = 1.0
+    future = dst.submit(TraceRequest(9.0, 32, 4))   # not yet due
+    due = dst.submit(TraceRequest(0.5, 32, 4))      # already due
+    # queue is (arrival, rid)-sorted: due work sits ahead of the future entry
+    assert [q.rid for q in dst.queue] == [due.rid, future.rid]
+    dst.step()
+    assert due.sched_first_s is not None, "due request stalled"
+    assert future.state == RState.QUEUED
+
+
+def test_class_weighted_routing_sheds_interactive_from_degraded():
+    # a degraded (deeply swapped) replica must lose interactive traffic
+    # first while background work still lands on it
+    cl = make_cluster(2)
+    e0, e1 = cl.replicas[0].engine, cl.replicas[1].engine
+    e0.actuator.level = e0.plan.n_layers          # replica 0 fully degraded
+    e1.submit(TraceRequest(0.0, 128, 32))         # replica 1 busier (depth 1)
+    assert cl._route(urgency=1.0) == 1, \
+        "interactive must avoid the degraded replica"
+    assert cl._route(urgency=0.1) == 0, \
+        "background should still fill the degraded replica"
+
+
 def test_router_scores_pressure_not_just_queue_depth():
     cl = make_cluster(2)
     # fresh cluster: deterministic tie-break to the lowest index

@@ -1,0 +1,242 @@
+"""SLO-class-aware scheduling: deadline-slack ordering, starvation-bounded
+aging, overload admission control (terminal SHED), class-aware preemption
+victims, class-weighted pressure, and per-class reporting."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ServingConfig, MORPH_LLAMA2_7B
+from repro.engine import (EngineConfig, MorphServeEngine, NVIDIA_L4,
+                          TraceRequest, build_report, mixed_class_traffic,
+                          long_prompt_flood)
+from repro.engine.cost_model import CostModel
+from repro.engine.request import Request, RState
+from repro.engine.traces import SLO_CLASSES
+
+
+def make_engine(*, policy="morph", slots=16, **ecfg_kw):
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=slots, max_seq_len=2048,
+                       swap_levels=(0, 2, 4, 8), mode="performance")
+    ec = EngineConfig(policy=policy, compute="sim", hw=NVIDIA_L4,
+                      dtype="bfloat16", seed=0, **ecfg_kw)
+    return MorphServeEngine(MORPH_LLAMA2_7B, None, sc, ec)
+
+
+# --------------------------------------------------------------------------
+# deadline-slack ordering
+# --------------------------------------------------------------------------
+def test_slack_orders_interactive_before_earlier_batch():
+    e = make_engine()
+    b = e.submit(TraceRequest(0.0, 64, 8, slo_class="batch"))
+    i = e.submit(TraceRequest(0.0, 64, 8, slo_class="interactive"))
+    order = e._admission_order()
+    assert [r.rid for r in order] == [i.rid, b.rid], \
+        "interactive (tight TTFT target) must outrank earlier batch work"
+
+
+def test_uniform_class_slack_degenerates_to_fifo():
+    e = make_engine()
+    rids = [e.submit(TraceRequest(0.01 * k, 64, 8)).rid for k in range(5)]
+    e.now = 1.0
+    assert [r.rid for r in e._admission_order()] == rids
+
+
+def test_admission_order_skips_future_arrivals():
+    # ISSUE 8 satellite: a future-dated entry at the queue head (possible
+    # after redispatch/migration interleave arrivals) must not stall
+    # admission of later entries that are already due
+    e = make_engine()
+    due = e.submit(TraceRequest(0.0, 64, 8))
+    future = e.submit(TraceRequest(50.0, 64, 8))
+    # force the pathological pre-fix layout: future arrival at the head
+    e.queue.remove(future)
+    e.queue.appendleft(future)
+    order = e._admission_order()
+    assert [r.rid for r in order] == [due.rid]
+    e.step()
+    assert due.sched_first_s is not None, \
+        "due request stalled behind a future-dated queue head"
+    assert future.state == RState.QUEUED
+
+
+def test_aging_lifts_starved_batch_over_fresh_interactive():
+    e = make_engine()
+    b = e.submit(TraceRequest(0.0, 64, 8, slo_class="batch"))
+    e.now = SLO_CLASSES["batch"].age_after_s + 30.0
+    i = e.submit(TraceRequest(e.now, 64, 8, slo_class="interactive"))
+    order = e._admission_order()
+    assert [r.rid for r in order] == [b.rid, i.rid], \
+        "aged batch request must overtake fresh interactive work"
+    assert b.aged
+
+
+def test_starvation_bypasses_stays_zero_under_mixed_overload():
+    e = make_engine(scheduler="slack")
+    trace = mixed_class_traffic(duration_s=12.0, base_rps=6.0, seed=5)
+    rep = e.run_trace(trace)
+    assert rep.starvation_bypasses == 0
+    assert rep.n_hung == 0
+
+
+# --------------------------------------------------------------------------
+# admission control / terminal shedding
+# --------------------------------------------------------------------------
+def test_shed_at_submit_when_no_relief_headroom():
+    # pinned policy => no morph headroom; a large same-class burst must be
+    # partially refused at the front door, earliest arrivals untouched
+    e = make_engine(policy="static_fp16", admission_control=True)
+    reqs = [e.submit(TraceRequest(0.0, 512, 4)) for _ in range(100)]
+    shed = [r for r in reqs if r.state == RState.SHED]
+    assert shed, "100x512-token burst must exceed the 6s interactive deadline"
+    assert e.shed_at_submit == len(shed) == e.shed
+    assert reqs[0].state == RState.QUEUED, "head of the burst must be kept"
+    # shed is terminal and refused requests never occupy the queue
+    assert all(r not in e.queue for r in shed)
+
+
+def test_no_shed_while_morph_headroom_remains():
+    # same burst, but the morph ladder is available: admission defers to it
+    e = make_engine(policy="morph", admission_control=True)
+    reqs = [e.submit(TraceRequest(0.0, 512, 4)) for _ in range(100)]
+    assert all(r.state == RState.QUEUED for r in reqs)
+    assert e.shed == 0
+
+
+def test_queue_head_sweep_sheds_blown_deadlines_once():
+    # FIFO + admission control: the tail of an overload burst is shed at the
+    # queue head with every terminal outcome counted exactly once
+    e = make_engine(policy="static_fp16", scheduler="fifo",
+                    admission_control=True)
+    trace = [TraceRequest(0.0, 512, 4) for _ in range(80)]
+    rep = e.run_trace(trace)
+    assert rep.n_shed > 0
+    assert rep.n_hung == 0
+    assert rep.n_shed + rep.n_finished + rep.n_failed == rep.n_requests, \
+        "every request must have exactly one terminal outcome"
+    assert e.shed == rep.n_shed
+    assert rep.slo_violations >= rep.n_shed   # shed always counts as violation
+
+
+def test_shed_requests_are_violations_not_free():
+    r = Request(0, 0.0, [1] * 8, 4, slo_class="interactive")
+    r.state = RState.SHED
+    rep = build_report([r], ttft_slo_s=2.0, duration_s=1.0)
+    assert rep.n_shed == 1 and rep.slo_violations == 1
+    assert rep.class_stats["interactive"]["n_shed"] == 1
+
+
+def test_interactive_not_shed_behind_lower_priority_backlog():
+    # priority-aware delay estimate: interactive work rides ahead of a big
+    # background backlog, so it must NOT be refused for a delay it will
+    # never experience
+    e = make_engine(policy="static_fp16", admission_control=True)
+    for _ in range(60):
+        e.submit(TraceRequest(0.0, 512, 4, slo_class="background"))
+    i = e.submit(TraceRequest(0.0, 96, 8, slo_class="interactive"))
+    assert i.state == RState.QUEUED, \
+        "interactive shed for background backlog it outranks"
+
+
+# --------------------------------------------------------------------------
+# class-aware victim selection
+# --------------------------------------------------------------------------
+def test_victim_order_background_first_interactive_last():
+    e = make_engine()
+    i = e.submit(TraceRequest(0.0, 32, 8, slo_class="interactive"))
+    b = e.submit(TraceRequest(0.0, 32, 8, slo_class="batch"))
+    g = e.submit(TraceRequest(0.0, 32, 8, slo_class="background"))
+    assert max([i, b, g], key=e._class_key) is g
+    assert max([i, b], key=e._class_key) is b
+    # uniform class falls back to the seed's highest-rid victim
+    i2 = e.submit(TraceRequest(0.0, 32, 8, slo_class="interactive"))
+    assert max([i, i2], key=e._class_key) is i2
+
+
+def test_preemption_under_pressure_evicts_background_first():
+    # tiny pool, mixed classes decoding: when decode needs a block and the
+    # pool is exhausted, the background request is evicted, interactive runs
+    sc = ServingConfig(hbm_budget_bytes=24 * 2**30, kv_block_size=16,
+                       max_batch_slots=4, max_seq_len=2048,
+                       swap_levels=(0,), mode="accuracy")
+    ec = EngineConfig(policy="static_fp16", compute="sim", hw=NVIDIA_L4,
+                      dtype="bfloat16", seed=0)
+    e = MorphServeEngine(MORPH_LLAMA2_7B, None, sc, ec)
+    # shrink the pool to just fit two prompts, no slack for decode growth
+    i = e.submit(TraceRequest(0.0, 62, 64, slo_class="interactive"))
+    g = e.submit(TraceRequest(0.0, 62, 64, slo_class="background"))
+    e.step()                              # both admitted (4 blocks each)
+    used = e.pool.alloc.n_used
+    # clamp the allocator so the next block allocation must preempt
+    while e._alloc_blocks(1):
+        pass
+    for _ in range(30):
+        e.step()
+        if g.preemptions:
+            break
+    assert g.preemptions >= 1, "background was never chosen as victim"
+    assert i.preemptions == 0, "interactive evicted while background ran"
+
+
+# --------------------------------------------------------------------------
+# CostModel queue-delay estimate (ISSUE 8 satellite)
+# --------------------------------------------------------------------------
+def test_queue_delay_estimate_monotone_in_backlog():
+    cm = CostModel(MORPH_LLAMA2_7B, NVIDIA_L4)
+    wb = 13.4e9
+    prev = -1.0
+    for backlog in [0, 1, 64, 256, 257, 1024, 4096, 65536]:
+        est = cm.queue_delay_estimate(backlog, 256, decode_batch=4,
+                                      decode_ctx_tokens=1024,
+                                      weight_bytes=wb)
+        assert est >= prev, f"estimate shrank at backlog={backlog}"
+        prev = est
+    assert cm.queue_delay_estimate(0, 256) == 0.0
+
+
+def test_queue_delay_estimate_agrees_with_sim_drain():
+    # the crystal ball must be the right order of magnitude: estimate the
+    # whole arrived backlog, run the engine, compare against the virtual
+    # time at which the last request actually started prefilling
+    e = make_engine(policy="static_fp16")
+    reqs = [e.submit(TraceRequest(0.0, 256, 1)) for _ in range(24)]
+    est = e._est_queue_delay()
+    assert est > 0
+    for _ in range(3000):
+        if all(r.sched_first_s is not None for r in reqs):
+            break
+        e.step()
+    assert all(r.sched_first_s is not None for r in reqs)
+    measured = max(r.sched_first_s for r in reqs)
+    assert est / 3 <= measured <= est * 3, (est, measured)
+
+
+# --------------------------------------------------------------------------
+# per-class reporting / goodput
+# --------------------------------------------------------------------------
+def test_per_class_attainment_uses_class_targets():
+    ok = Request(0, 0.0, [1] * 8, 4, slo_class="interactive")
+    ok.state, ok.first_token_s = RState.FINISHED, 1.0   # 1s < 2s target
+    ok.generated = [1, 2, 3, 4]
+    late = Request(1, 0.0, [1] * 8, 4, slo_class="batch")
+    late.state, late.first_token_s = RState.FINISHED, 11.0  # 11s > 10s
+    late.generated = [1, 2]
+    rep = build_report([ok, late], ttft_slo_s=2.0, duration_s=2.0)
+    assert rep.class_stats["interactive"]["slo_attainment"] == 1.0
+    assert rep.class_stats["batch"]["slo_attainment"] == 0.0
+    # goodput counts only the on-time request's tokens
+    assert rep.goodput_tok_s == pytest.approx(len(ok.generated) / 2.0)
+    assert rep.throughput_tok_s == pytest.approx(6 / 2.0)
+    assert "interactive" in rep.class_table()
+
+
+def test_adversarial_generators_shape():
+    flood = long_prompt_flood(duration_s=20.0, seed=1)
+    assert any(t.slo_class == "batch" and t.prompt_len >= 1024
+               for t in flood), "flood window must carry long batch prompts"
+    assert any(t.slo_class == "interactive" for t in flood)
+    mixed = mixed_class_traffic(duration_s=20.0, base_rps=4.0, seed=1)
+    classes = {t.slo_class for t in mixed}
+    assert classes == {"interactive", "batch", "background"}
+    assert all(t1.arrival_s <= t2.arrival_s
+               for t1, t2 in zip(mixed, mixed[1:]))
