@@ -10,8 +10,11 @@ bytes are the TPU story (packed bytes only vs a dequantized fp32 round-trip).
 The decode-step benchmark measures the engine's fused decode attention op
 (``ops.paged_decode_attention``) at a fixed ``max_nb`` with the block table
 truncated to the live power-of-two bucket — the HBM-traffic lever this data
-plane is built around. Results land in ``BENCH_decode.json`` so the perf
-trajectory is machine-readable across PRs."""
+plane is built around. The chunk-prefill leg (``chunk_prefill_bench``,
+refreshable alone via ``--only-chunk``) does the same for chunked-prefill
+attention and additionally asserts token identity of the fused Pallas chunk
+kernel vs the gather reference. Results land in ``BENCH_decode.json`` so
+the perf trajectory is machine-readable across PRs."""
 from __future__ import annotations
 
 import argparse
@@ -27,6 +30,7 @@ from repro.configs import reduced, MORPH_LLAMA2_7B
 from repro.engine.kv_cache import PagedKVPool
 from repro.engine.model_exec import pad_bucket
 from repro.kernels import ops, ref
+from repro.kernels import paged_attention as pa
 from repro.quant import qlinear, quantize_tensor
 
 
@@ -190,33 +194,121 @@ def decode_bench(smoke: bool = False):
     return payload
 
 
+def chunk_prefill_bench(smoke: bool = False):
+    """Chunk-prefill attention leg: the engine's xla gather path at the full
+    vs the live-bucketed table width, plus the fused Pallas chunk kernel
+    (batched-append variant, interpret mode on this container — a kernel-
+    body validation timing, not a perf number) and its token identity vs
+    the gather reference (both outputs projected through one random unembed
+    and argmax-compared per chunk position).
+
+    Updates the ``chunk_prefill`` key of BENCH_decode.json in place so it
+    composes with ``decode_bench`` whichever runs first. CI gates
+    ``speedup_bucketed_table`` and ``token_identical_vs_ref``."""
+    B, H, KVH, Dh, bs, C = 1, 32, 8, 128, 16, 64
+    maxnb = 16 if smoke else 64
+    nb_pool = maxnb + 8
+    pos0 = 3 * bs                      # context paged by earlier chunks
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (B, C, H, Dh))
+    kp = jax.random.normal(ks[1], (nb_pool, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nb_pool, bs, KVH, Dh))
+    kn = jax.random.normal(ks[3], (B, C, KVH, Dh))
+    vn = jax.random.normal(ks[4], (B, C, KVH, Dh))
+    tables = jnp.array(
+        1 + np.random.default_rng(1).permutation(maxnb).reshape(B, maxnb),
+        jnp.int32)
+    # engine contract: chunk KV sits in the pool at the table offset
+    idx = pos0 + np.arange(C)
+    blk = np.asarray(tables)[0][idx // bs]
+    kp = kp.at[blk, idx % bs].set(kn[0])
+    vp = vp.at[blk, idx % bs].set(vn[0])
+    nb_bucket = min(pad_bucket((pos0 + C) // bs + 1, 1), maxnb)
+
+    def gather_us(nb_t):
+        fn = jax.jit(lambda q, kp, vp, t:
+                     pa.paged_chunk_gather_attention(q, kp, vp, t, pos0))
+        t = tables[:, :nb_t]
+        return timeit(lambda: jax.block_until_ready(fn(q, kp, vp, t)))
+
+    us_full = gather_us(maxnb)
+    us_bucket = gather_us(nb_bucket)
+    t = tables[:, :nb_bucket]
+    us_kernel = timeit(lambda: jax.block_until_ready(
+        pa.paged_chunk_attention_fused(q, kn, vn, kp, vp, t, pos0,
+                                       interpret=True)), n=2, warmup=1)
+    # token identity: same pseudo-unembed over both attention outputs
+    out_ref = pa.paged_chunk_gather_attention(q, kp, vp, t, pos0)
+    out_ker = pa.paged_chunk_attention_fused(q, kn, vn, kp, vp, t, pos0,
+                                             interpret=True)
+    unembed = jax.random.normal(jax.random.PRNGKey(9), (H * Dh, 256))
+    toks_ref = jnp.argmax(out_ref.reshape(B, C, -1) @ unembed, -1)
+    toks_ker = jnp.argmax(out_ker.reshape(B, C, -1) @ unembed, -1)
+    section = {
+        "config": {"B": B, "H": H, "KVH": KVH, "Dh": Dh, "block_size": bs,
+                   "chunk": C, "pos0": pos0, "max_nb": maxnb,
+                   "backend": jax.default_backend(), "smoke": smoke},
+        "results": [
+            {"name": "chunk_prefill_gather_full", "us_per_call": us_full,
+             "nb_table": maxnb},
+            {"name": "chunk_prefill_gather_bucketed",
+             "us_per_call": us_bucket, "nb_table": nb_bucket},
+            {"name": "chunk_prefill_pallas_interpret",
+             "us_per_call": us_kernel, "nb_table": nb_bucket},
+        ],
+        "speedup_bucketed_table": us_full / us_bucket,
+        "token_identical_vs_ref": bool((toks_ref == toks_ker).all()),
+    }
+    out = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
+    payload = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            payload = json.load(f)
+    payload["chunk_prefill"] = section
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI")
+    ap.add_argument("--only-chunk", action="store_true",
+                    help="refresh only the chunk_prefill section of "
+                         "BENCH_decode.json")
     # tolerate foreign argv when invoked via benchmarks/run.py
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
-    for name, us, derived in run(smoke=args.smoke):
-        print(f"{name},{us:.1f},{derived}")
-    wpay = wna16_bench(smoke=args.smoke)
-    for r in wpay["gemm"]:
-        print(f"{r['name']},{r['fused_us']:.1f},"
-              f"dequant_us={r['dequant_matmul_us']:.1f};"
-              f"weight_bytes_ratio={r['weight_bytes_ratio']:.3f}")
-    for r in wpay["resize"]:
-        print(f"{r['name']},{r['us_per_resize']:.1f},"
-              f"copies={r['device_copies']}")
-    print(f"wna16 int4 modeled weight-byte ratio (fused/dequant): "
-          f"{wpay['fused_weight_bytes_ratio_int4']:.3f}")
-    print(f"pool resize within-bucket speedup: "
-          f"{wpay['resize_within_bucket_speedup']:.1f}x")
-    payload = decode_bench(smoke=args.smoke)
-    for r in payload["results"]:
+    if not args.only_chunk:
+        for name, us, derived in run(smoke=args.smoke):
+            print(f"{name},{us:.1f},{derived}")
+        wpay = wna16_bench(smoke=args.smoke)
+        for r in wpay["gemm"]:
+            print(f"{r['name']},{r['fused_us']:.1f},"
+                  f"dequant_us={r['dequant_matmul_us']:.1f};"
+                  f"weight_bytes_ratio={r['weight_bytes_ratio']:.3f}")
+        for r in wpay["resize"]:
+            print(f"{r['name']},{r['us_per_resize']:.1f},"
+                  f"copies={r['device_copies']}")
+        print(f"wna16 int4 modeled weight-byte ratio (fused/dequant): "
+              f"{wpay['fused_weight_bytes_ratio_int4']:.3f}")
+        print(f"pool resize within-bucket speedup: "
+              f"{wpay['resize_within_bucket_speedup']:.1f}x")
+        payload = decode_bench(smoke=args.smoke)
+        for r in payload["results"]:
+            print(f"{r['name']},{r['us_per_call']:.1f},"
+                  f"nb_table={r['nb_table']};live_ctx={r['live_ctx']}")
+        print(f"decode short-ctx speedup (bucketed vs full table): "
+              f"{payload['speedup_short_ctx']:.2f}x")
+    cpay = chunk_prefill_bench(smoke=args.smoke)
+    for r in cpay["results"]:
         print(f"{r['name']},{r['us_per_call']:.1f},"
-              f"nb_table={r['nb_table']};live_ctx={r['live_ctx']}")
-    print(f"decode short-ctx speedup (bucketed vs full table): "
-          f"{payload['speedup_short_ctx']:.2f}x")
+              f"nb_table={r['nb_table']}")
+    print(f"chunk-prefill bucketed-table speedup: "
+          f"{cpay['speedup_bucketed_table']:.2f}x")
+    print(f"chunk-prefill kernel token-identical vs reference: "
+          f"{cpay['token_identical_vs_ref']}")
 
 
 if __name__ == "__main__":

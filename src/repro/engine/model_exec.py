@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels import ops
+from repro.kernels import dispatch, ops
 from repro.models import layers as L
 from repro.models import lm
 from repro.models import mamba as M
@@ -32,6 +32,25 @@ def pad_bucket(n: int, quantum: int = 64) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def build_attention_specs(cfg: ModelConfig, kinds) -> tuple:
+    """One :class:`~repro.kernels.ops.AttentionSpec` per layer, built once at
+    :class:`ModelExec` construction and baked statically into the jitted
+    steps — window, softcap, softmax scale, head layout, and (for MLA) the
+    latent value width all live here instead of being threaded as kwargs
+    through every attention call site."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        spec = ops.AttentionSpec(
+            scale=(m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5,
+            q_heads=cfg.n_heads, kv_heads=1, latent_dv=m.kv_lora_rank)
+        return tuple(spec for _ in kinds)
+    return tuple(
+        ops.AttentionSpec(window=lm.layer_window(cfg, i),
+                          softcap=cfg.logit_softcap,
+                          q_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads)
+        for i, _ in enumerate(kinds))
 
 
 # ---------------------------------------------------------------------------
@@ -52,13 +71,13 @@ def _gather_kv(pool, li, tables):
     return g.reshape(s, nb * bs, *g.shape[3:])
 
 
-def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, *,
-                      window: int = 0):
+def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, spec):
     """x: (slots, 1, D); pos: (slots,) absolute position of the new token.
 
     The attention read goes through ``kernels/ops.paged_decode_attention``
     (Pallas block-walk on TPU; bucketed jnp gather elsewhere) — cost follows
     the caller-truncated width of ``tables``, not max_blocks_per_seq.
+    ``spec`` is the layer's static :class:`~repro.kernels.ops.AttentionSpec`.
     """
     slots = x.shape[0]
     bs = pool_k.shape[2]
@@ -67,8 +86,7 @@ def _paged_gqa_decode(p, cfg, x, pool_k, pool_v, li, tables, pos, *,
     pool_k, pool_v = _append_kv(pool_k, pool_v, li, k[:, 0], v[:, 0],
                                 blk_idx, pos % bs)
     out = ops.paged_decode_attention(
-        q[:, 0], k[:, 0], v[:, 0], pool_k[li], pool_v[li], tables, pos,
-        window=window, softcap=cfg.logit_softcap)
+        q[:, 0], k[:, 0], v[:, 0], pool_k[li], pool_v[li], tables, pos, spec)
     y = qlinear.matmul(out.reshape(slots, 1, -1), p["wo"], bias=p.get("bo"))
     return y, pool_k, pool_v
 
@@ -110,8 +128,8 @@ def _paged_mla_decode(p, cfg, x, pool_k, li, tables, pos):
 # ---------------------------------------------------------------------------
 # Decode step over the full stack
 # ---------------------------------------------------------------------------
-def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
-                      pos, pool_k, pool_v, tables, ssm_conv, ssm_ssm):
+def paged_decode_step(cfg: ModelConfig, kinds, specs, misc, layer_params,
+                      tokens, pos, pool_k, pool_v, tables, ssm_conv, ssm_ssm):
     """tokens: (slots, 1); pos: (slots,) absolute index of the token being
     decoded (= context length *before* it, i.e. context_len - 1 once the
     token is counted in generated). RoPE position and KV append slot.
@@ -119,7 +137,7 @@ def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
     x = jnp.take(misc["embed"], tokens, axis=0)
     ssm_li = 0
     for i, (kind, p) in enumerate(zip(kinds, layer_params)):
-        w = lm.layer_window(cfg, i)
+        spec = specs[i]
         if kind == "mamba":
             h = L.apply_norm(cfg.norm, p["norm"], x)
             st = {"conv": ssm_conv[ssm_li], "ssm": ssm_ssm[ssm_li]}
@@ -132,7 +150,7 @@ def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
         if kind == "hybrid":
             h = L.apply_norm(cfg.norm, p["ln1"], x)
             a, pool_k, pool_v = _paged_gqa_decode(
-                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, window=w)
+                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, spec)
             st = {"conv": ssm_conv[ssm_li], "ssm": ssm_ssm[ssm_li]}
             s, st = M.mamba_decode(p["ssm"], cfg, h, st)
             ssm_conv = ssm_conv.at[ssm_li].set(st["conv"])
@@ -150,7 +168,7 @@ def paged_decode_step(cfg: ModelConfig, kinds, misc, layer_params, tokens,
                                                  i, tables, pos)
         else:
             attn_out, pool_k, pool_v = _paged_gqa_decode(
-                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, window=w)
+                p["attn"], cfg, h, pool_k, pool_v, i, tables, pos, spec)
         if cfg.parallel_block:
             x = x + attn_out + L.mlp_apply(p["mlp"], cfg, h)
             continue
@@ -231,38 +249,64 @@ def paged_prefill_batch(cfg: ModelConfig, kinds, misc, layer_params, tokens,
 
 
 def _chunk_gqa_attention(p, cfg, x, positions, pool_k, pool_v, li, tables,
-                         blk, off, pos0, *, window: int = 0):
+                         blk, off, pos0, spec):
     """Causal chunk attention against already-paged context (batch 1).
 
     x: (1, Cp, D) chunk activations at absolute positions ``positions``;
     the chunk's KV is scattered into layer ``li`` of the pool first (pad
     positions land in blocks the next chunk overwrites, or in scratch 0),
-    then queries attend over the table gather: position ``pos0 + i`` sees
-    every pool token ``<= pos0 + i`` — bit-equal to whole-prompt prefill
-    because per-token projections are row-independent and the pool round-
-    trip is value-preserving *as long as the pool dtype holds the KV
-    exactly* (the default float32 pool does, for bf16 or f32 activations).
-    A lossy pool (fp8/bf16) makes chunk 2+ attend over rounded KV — the
-    same divergence the pool-backed decode path already has vs dense."""
+    then the chunk attends through ``ops.paged_prefill_attention``: under
+    the Pallas modes that is the fused block-walk kernel — the chunk's own
+    (k, v) ride along as VMEM operands (batched append) and the walk covers
+    only the already-paged context ``< pos0`` — under ``xla`` the bucketed
+    table gather, where position ``pos0 + i`` sees every pool token
+    ``<= pos0 + i``. Both are bit-equal to whole-prompt prefill because
+    per-token projections are row-independent and the pool round-trip is
+    value-preserving *as long as the pool dtype holds the KV exactly* (the
+    default float32 pool does, for bf16 or f32 activations; the kernel
+    casts its VMEM chunk operands to the pool dtype so both paths see the
+    same rounding). A lossy pool (fp8/bf16) makes chunk 2+ attend over
+    rounded KV — the same divergence the pool-backed decode path already
+    has vs dense."""
     B, Cp, _ = x.shape
     q, k, v = L.gqa_project_qkv(p, cfg, x, positions)
     pool_k = pool_k.at[li, blk, off].set(k[0].astype(pool_k.dtype))
     pool_v = pool_v.at[li, blk, off].set(v[0].astype(pool_v.dtype))
     out = ops.paged_prefill_attention(q, pool_k[li], pool_v[li],
-                                      tables[None], pos0, window=window,
-                                      softcap=cfg.logit_softcap)
+                                      tables[None], pos0, spec,
+                                      k_new=k, v_new=v)
     y = qlinear.matmul(out.reshape(B, Cp, -1), p["wo"], bias=p.get("bo"))
     return y, pool_k, pool_v
 
 
 def _chunk_mla_attention(p, cfg, x, positions, pool_k, li, tables, blk, off,
-                         pos0):
-    """MLA chunk attention over the latent pool (KVH=1, Dh=r+rope)."""
+                         pos0, spec):
+    """MLA chunk attention over the latent pool (KVH=1, Dh=r+rope).
+
+    Two numerics, mirroring decode: with absorbed decode params (``wk_abs``
+    present — the Pallas dispatch modes) the chunk scores directly against
+    the latent pool through the fused chunk kernel (``spec.latent_dv``
+    keeps the first ``kv_lora_rank`` value lanes, ``spec.scale`` is the qk
+    head-dim scale) and expands the latent context through ``wv_abs``
+    afterwards; with raw params (``w_ukv`` — the xla fallback) the latent
+    context is expanded to per-head K/V first, as whole-prompt prefill
+    does. Both are the same attention by the weight-absorption identity."""
     m = cfg.mla
     B, Cp, _ = x.shape
     q_nope, q_rope, c_kv_new, k_rope_new = L._mla_qkv(p, cfg, x, positions)
     latent_new = jnp.concatenate([c_kv_new[0], k_rope_new[0, :, 0]], -1)
     pool_k = pool_k.at[li, blk, off, 0].set(latent_new.astype(pool_k.dtype))
+    if "wk_abs" in p:
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           p["wk_abs"])
+        q_lat = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)], -1)
+        ctx_lat = ops.paged_prefill_attention(
+            q_lat, pool_k[li], pool_k[li], tables[None], pos0, spec,
+            k_new=latent_new[None, :, None, :],
+            v_new=latent_new[None, :, None, :])
+        out = jnp.einsum("bshr,rhd->bshd", ctx_lat.astype(jnp.float32),
+                         p["wv_abs"]).astype(x.dtype)
+        return qlinear.matmul(out.reshape(B, Cp, -1), p["wo"]), pool_k
     lat = _gather_kv(pool_k, li, tables[None])[..., 0, :]  # (1, T, r+rope)
     c_kv, k_rope = jnp.split(lat, [m.kv_lora_rank], axis=-1)
     k_nope, v = L._mla_expand_kv(p, cfg, c_kv.astype(x.dtype))
@@ -277,8 +321,8 @@ def _chunk_mla_attention(p, cfg, x, positions, pool_k, li, tables, blk, off,
     return y, pool_k
 
 
-def paged_prefill_chunk(cfg: ModelConfig, kinds, misc, layer_params, tokens,
-                        pos0, pool_k, pool_v, tables):
+def paged_prefill_chunk(cfg: ModelConfig, kinds, specs, misc, layer_params,
+                        tokens, pos0, pool_k, pool_v, tables):
     """Prefill ONE chunk of ONE request against partially-paged context.
 
     tokens: (1, Cp) — the chunk, end-padded to a bucketed length; pos0:
@@ -301,16 +345,15 @@ def paged_prefill_chunk(cfg: ModelConfig, kinds, misc, layer_params, tokens,
     off = abs_pos % bs
     x = jnp.take(misc["embed"], tokens, axis=0)
     for i, (kind, p) in enumerate(zip(kinds, layer_params)):
-        w = lm.layer_window(cfg, i)
         h = L.apply_norm(cfg.norm, p["ln1"], x)
         if cfg.mla is not None:
             attn_out, pool_k = _chunk_mla_attention(
                 p["attn"], cfg, h, positions, pool_k, i, tables, blk, off,
-                pos0)
+                pos0, specs[i])
         else:
             attn_out, pool_k, pool_v = _chunk_gqa_attention(
                 p["attn"], cfg, h, positions, pool_k, pool_v, i, tables,
-                blk, off, pos0, window=w)
+                blk, off, pos0, specs[i])
         if cfg.parallel_block:
             x = x + attn_out + L.mlp_apply(p["mlp"], cfg, h)
             continue
@@ -367,8 +410,11 @@ class ModelExec:
         self.kinds = tuple(kinds)
         self.misc = {k: v for k, v in params.items() if k != "segments"}
         self._absorb_cache: Dict[int, Tuple[Any, Any]] = {}
+        # per-layer static attention config, bound into the partials (not a
+        # traced arg) so donate_argnums keep pointing at the pools below
+        self.specs = build_attention_specs(cfg, self.kinds)
         self._decode_jit = jax.jit(
-            functools.partial(paged_decode_step, cfg, self.kinds),
+            functools.partial(paged_decode_step, cfg, self.kinds, self.specs),
             donate_argnums=(4, 5, 7, 8))
         self._prefill_jit = jax.jit(
             functools.partial(paged_prefill, cfg, self.kinds),
@@ -380,7 +426,8 @@ class ModelExec:
         # level pytree) — both dims power-of-two bucketed by the engine, so
         # the recompile set stays log-bounded like prompt/pool buckets.
         self._prefill_chunk_jit = jax.jit(
-            functools.partial(paged_prefill_chunk, cfg, self.kinds),
+            functools.partial(paged_prefill_chunk, cfg, self.kinds,
+                              self.specs),
             donate_argnums=(4, 5))
 
     def _decode_params(self, layer_list):
@@ -414,6 +461,12 @@ class ModelExec:
                                        pool_k, pool_v, tables, lens)
 
     def prefill_chunk(self, layer_list, tokens, pos0, pool_k, pool_v, table):
-        lp = tuple(p for _, p in layer_list)
+        # MLA under the Pallas modes scores against the latent pool with the
+        # absorbed decode weights (same per-level cache as decode); the xla
+        # fallback keeps the raw params + expanded-KV reference numerics.
+        if self.cfg.mla is not None and dispatch.uses_pallas():
+            lp = self._decode_params(layer_list)
+        else:
+            lp = tuple(p for _, p in layer_list)
         return self._prefill_chunk_jit(self.misc, lp, tokens, pos0,
                                        pool_k, pool_v, table)

@@ -1,5 +1,8 @@
 # MorphServe's two compute hot-spots (paper §3.3 / §3.4):
 #   wna16_gemm.py      — fused dequant + GEMM for quantized layer variants
-#   paged_attention.py — block-table KV decode attention (KVResizer substrate)
-# Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py.
-from repro.kernels import ops, ref
+#   paged_attention.py — block-table KV decode attention + the fused
+#                        chunk-prefill block walk (KVResizer substrate)
+# Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py;
+# dispatch.py is the shared REPRO_QUANT_KERNEL mode resolver.
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.ops import AttentionSpec

@@ -1,0 +1,74 @@
+"""Shared ``REPRO_QUANT_KERNEL`` platform dispatch for the Pallas kernels.
+
+Every fused kernel family in the data plane — the wNa16 GEMM
+(:mod:`repro.kernels.wna16_gemm`), paged decode attention, and the
+chunk-prefill block walk (:mod:`repro.kernels.paged_attention`) — resolves
+its execution path through this one module instead of re-implementing the
+env-var / backend logic per call site:
+
+  * ``auto``             — compiled Pallas on TPU, XLA fallback elsewhere
+  * ``pallas``           — compiled Pallas (Mosaic) unconditionally
+  * ``pallas_interpret`` — Pallas interpret mode (kernel-body validation on
+                           CPU; used by the parity/token-identity tests and
+                           the ``pallas_interpret`` CI matrix leg)
+  * ``xla``              — the pure-XLA fallback path of the kernel family
+                           (packed-dequant matmul for wNa16; the bucketed
+                           jnp gather for paged/chunk attention — also the
+                           numerically pinned parity oracle)
+
+The mode is read at trace time — set it before building jitted callables
+(the engine's per-instance jit caches make this safe per engine). The env
+var is only the initial value; :func:`set_mode` overrides it at runtime.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+MODES = ("auto", "pallas", "pallas_interpret", "xla")
+
+_mode = os.environ.get("REPRO_QUANT_KERNEL", "auto")
+
+
+def set_mode(mode: str) -> str:
+    """Set the global dispatch mode; returns the previous mode."""
+    global _mode
+    if mode not in MODES:
+        raise ValueError(f"unknown REPRO_QUANT_KERNEL mode {mode!r}; "
+                         f"expected one of {MODES}")
+    prev = _mode
+    _mode = mode
+    return prev
+
+
+def mode() -> str:
+    """The raw (unresolved) dispatch mode, possibly ``auto``."""
+    return _mode
+
+
+def resolve(m: str = None, backend: str = None) -> str:
+    """Resolve a dispatch mode to one of pallas | pallas_interpret | xla.
+
+    ``m`` defaults to the global mode; ``backend`` to
+    ``jax.default_backend()`` (only consulted for ``auto``).
+    """
+    m = _mode if m is None else m
+    if m not in MODES:
+        raise ValueError(f"unknown REPRO_QUANT_KERNEL mode {m!r}; "
+                         f"expected one of {MODES}")
+    if m == "auto":
+        backend = backend or jax.default_backend()
+        return "pallas" if backend == "tpu" else "xla"
+    return m
+
+
+def uses_pallas(m: str = None, backend: str = None) -> bool:
+    """True when the resolved mode runs a Pallas kernel body
+    (compiled or interpret) rather than the XLA fallback."""
+    return resolve(m, backend) != "xla"
+
+
+def interpret(m: str = None, backend: str = None) -> bool:
+    """True when Pallas kernels should run in interpret mode."""
+    return resolve(m, backend) == "pallas_interpret"

@@ -1,58 +1,94 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``paged_decode_attention`` is the engine's decode attention hot path: on TPU
-it is the fused Pallas kernel (block walk + fused single-token append);
-elsewhere it lowers to a bucketed jnp gather whose cost follows the caller's
-block-table width (the engine truncates tables to the live power-of-two
-bucket) instead of ``max_blocks_per_seq``.
+One :class:`AttentionSpec` describes everything the attention kernels need
+beyond the tensors themselves — sliding window, logit softcap, softmax
+scale, head layout, MLA latent dims — so the engine builds the spec once
+per layer (at :class:`~repro.engine.model_exec.ModelExec` construction)
+instead of threading six kwargs through every call site.
 
-``wna16_matmul`` is the one quantized-matmul path of the data plane. Platform
-dispatch (``REPRO_QUANT_KERNEL`` env var or :func:`set_quant_kernel_mode`):
+``paged_decode_attention`` is the engine's decode attention hot path and
+``paged_prefill_attention`` the chunked-prefill one. Both dispatch through
+the shared :mod:`repro.kernels.dispatch` resolver (``REPRO_QUANT_KERNEL``
+env var or :func:`set_quant_kernel_mode`), the same four modes as the
+wNa16 GEMM:
 
   * ``auto``             — compiled Pallas on TPU, XLA fallback elsewhere
   * ``pallas``           — compiled Pallas (Mosaic) unconditionally
   * ``pallas_interpret`` — Pallas interpret mode (kernel-body validation on
                            CPU; used by the parity/token-identity tests)
-  * ``xla``              — packed-dequant fallback: dequantize + matmul +
-                           epilogue in one traced graph, fused by XLA
+  * ``xla``              — the bucketed jnp gather (attention) / the
+                           packed-dequant fused matmul (wNa16): the
+                           numerically pinned fallback + parity oracle
 
 The mode is read at trace time — set it before building jitted callables
 (the engine's per-instance jit caches make this safe per engine).
 """
 from __future__ import annotations
 
-import os
+import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels import paged_attention as pa
 from repro.kernels.wna16_gemm import wna16_gemm as _gemm
 
-_QUANT_KERNEL_MODES = ("auto", "pallas", "pallas_interpret", "xla")
-_quant_kernel_mode = os.environ.get("REPRO_QUANT_KERNEL", "auto")
+_QUANT_KERNEL_MODES = dispatch.MODES
 
 
 def set_quant_kernel_mode(mode: str) -> str:
-    """Set the wNa16 dispatch mode; returns the previous mode."""
-    global _quant_kernel_mode
-    assert mode in _QUANT_KERNEL_MODES, (mode, _QUANT_KERNEL_MODES)
-    prev = _quant_kernel_mode
-    _quant_kernel_mode = mode
-    return prev
+    """Set the kernel dispatch mode; returns the previous mode."""
+    return dispatch.set_mode(mode)
 
 
 def quant_kernel_mode() -> str:
     """Resolved dispatch mode (``auto`` resolves by backend)."""
-    if _quant_kernel_mode == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    return _quant_kernel_mode
+    return dispatch.resolve()
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# ---------------------------------------------------------------------------
+# AttentionSpec: the one attention-parameter bundle of the data plane
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Static attention configuration shared by decode / prefill / chunk.
+
+    Frozen + hashable so it can be baked into jitted callables as a static
+    argument. ``scale=None`` means the kernel default ``head_dim ** -0.5``.
+    ``latent_dv`` enables the MLA latent mode: keys/values live in one
+    latent pool of width ``kv_lora_rank + rope`` (``kv_heads == 1``),
+    scores span the full latent width, and the value accumulation keeps
+    only the first ``latent_dv`` (= ``kv_lora_rank``) lanes — the paged
+    form of the DeepSeek weight-absorption identity. ``q_heads`` /
+    ``kv_heads`` are the head layout (GQA group = q_heads // kv_heads);
+    they are informational for shape checks and may be omitted.
+    """
+    window: int = 0
+    softcap: float = 0.0
+    scale: Optional[float] = None
+    q_heads: Optional[int] = None
+    kv_heads: Optional[int] = None
+    latent_dv: Optional[int] = None
+
+    def validate(self, q, k_pool) -> None:
+        if self.q_heads is not None:
+            assert q.shape[-2] == self.q_heads, (q.shape, self)
+        if self.kv_heads is not None:
+            assert k_pool.shape[2] == self.kv_heads, (k_pool.shape, self)
 
 
+def _spec_of(spec, window, softcap):
+    """Deprecated-kwarg shim: old callers pass window/softcap directly."""
+    if spec is None:
+        return AttentionSpec(window=window, softcap=softcap)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# wNa16 quantized matmul
+# ---------------------------------------------------------------------------
 def _xla_packed_matmul(x2, qt, bias):
     """Packed-dequant fallback, one traced graph so XLA fuses the epilogue.
     Numerically identical to the default jnp QTensor path."""
@@ -71,7 +107,7 @@ def wna16_matmul(x2, qt, *, bias=None):
     cast to the activation dtype — no fp32 round-trips through HBM.
     """
     assert qt.bits in (4, 8), "Pallas path supports int4/int8 (DESIGN.md §2)"
-    mode = quant_kernel_mode()
+    mode = dispatch.resolve()
     if mode == "xla":
         return _xla_packed_matmul(x2, qt, bias)
     return _gemm(x2, qt.packed, qt.scales, qt.zeros, qt.inv_act, bias,
@@ -79,42 +115,83 @@ def wna16_matmul(x2, qt, *, bias=None):
                  interpret=(mode == "pallas_interpret"))
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+# ---------------------------------------------------------------------------
+# paged attention (decode + chunked prefill), AttentionSpec-driven
+# ---------------------------------------------------------------------------
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                    spec: AttentionSpec = None, *,
                     window: int = 0, softcap: float = 0.0):
+    """Context-only decode read (no append); thin wrapper over the block
+    walk. ``window=``/``softcap=`` kwargs are the deprecated pre-spec
+    surface and build an :class:`AttentionSpec` internally."""
+    spec = _spec_of(spec, window, softcap)
     return pa.paged_attention(q, k_pool, v_pool, block_tables, context_lens,
-                              window=window, softcap=softcap,
-                              interpret=_interpret())
+                              window=spec.window, softcap=spec.softcap,
+                              scale=spec.scale,
+                              interpret=dispatch.resolve() != "pallas")
 
 
 def paged_decode_attention(q, k_new, v_new, k_pool, v_pool, block_tables,
-                           pos, *, window: int = 0, softcap: float = 0.0):
+                           pos, spec: AttentionSpec = None, *,
+                           window: int = 0, softcap: float = 0.0):
     """Decode attention over pool KV + the current token (B, KVH, Dh).
 
     Contract: the caller has already scattered (k_new, v_new) into the pool
     at position ``pos[b]`` (the scatter and this read are independent — the
-    TPU kernel only reads positions < pos and takes the new token as a VMEM
-    operand). ``block_tables`` may be truncated to any width covering
-    ``pos // block_size``; cost scales with that width on the jnp path.
+    Pallas kernel only reads positions < pos and takes the new token as a
+    VMEM operand). ``block_tables`` may be truncated to any width covering
+    ``pos // block_size``; cost scales with that width on the gather path.
+
+    Dispatch: ``pallas``/``pallas_interpret`` run the fused block-walk
+    kernel; ``xla`` the bucketed jnp gather; ``auto`` picks by backend.
     """
-    if jax.default_backend() == "tpu":
-        return pa.paged_attention_fused(q, k_new, v_new, k_pool, v_pool,
-                                        block_tables, pos, window=window,
-                                        softcap=softcap, interpret=False)
-    return pa.paged_gather_attention(q, k_pool, v_pool, block_tables, pos,
-                                     window=window, softcap=softcap)
+    spec = _spec_of(spec, window, softcap)
+    mode = dispatch.resolve()
+    if mode == "xla":
+        return pa.paged_gather_attention(q, k_pool, v_pool, block_tables,
+                                         pos, window=spec.window,
+                                         softcap=spec.softcap)
+    return pa.paged_attention_fused(q, k_new, v_new, k_pool, v_pool,
+                                    block_tables, pos, window=spec.window,
+                                    softcap=spec.softcap, scale=spec.scale,
+                                    interpret=(mode == "pallas_interpret"))
 
 
-def paged_prefill_attention(q, k_pool, v_pool, block_tables, pos0, *,
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, pos0,
+                            spec: AttentionSpec = None, *,
+                            k_new=None, v_new=None,
                             window: int = 0, softcap: float = 0.0):
     """Chunked-prefill attention: C queries at positions ``pos0 + i`` over
-    paged context (the chunk's own KV already scattered into the pool).
+    paged context, mirroring ``paged_decode_attention`` for the decode hot
+    path. The caller has already scattered the chunk's own KV into the pool
+    at the request's block-table offset.
 
-    The engine's prefill chunks go through here, mirroring
-    ``paged_decode_attention`` for the decode hot path. All backends take
-    the gather path today — the pinned reference a future Pallas chunk
-    block-walk must reproduce bit-for-bit; its cost already tracks the
+    Dispatch: under ``pallas``/``pallas_interpret`` this is the fused
+    chunk block-walk kernel — when the chunk's (k_new, v_new), shape
+    (B, C, KVH, Dh), are passed, the multi-token batched-append variant
+    folds them into the softmax as VMEM operands and the walk never
+    re-reads the just-appended chunk from the HBM pool; without them the
+    pool-read variant re-gathers the chunk from the pool. Under ``xla``
+    (and ``auto`` off-TPU) it is the bucketed jnp gather — the numerically
+    pinned reference the kernel must match, whose cost already tracks the
     caller-bucketed table width, not ``max_blocks_per_seq``.
+
+    MLA latent pools go through ``spec.latent_dv``/``spec.scale`` with the
+    absorbed query (see ``model_exec._chunk_mla_attention``).
     """
-    return pa.paged_chunk_gather_attention(q, k_pool, v_pool, block_tables,
-                                           pos0, window=window,
-                                           softcap=softcap)
+    spec = _spec_of(spec, window, softcap)
+    mode = dispatch.resolve()
+    if mode == "xla":
+        return pa.paged_chunk_gather_attention(
+            q, k_pool, v_pool, block_tables, pos0, window=spec.window,
+            softcap=spec.softcap, scale=spec.scale, dv=spec.latent_dv)
+    interpret = mode == "pallas_interpret"
+    if k_new is not None:
+        return pa.paged_chunk_attention_fused(
+            q, k_new, v_new, k_pool, v_pool, block_tables, pos0,
+            window=spec.window, softcap=spec.softcap, scale=spec.scale,
+            dv=spec.latent_dv, interpret=interpret)
+    return pa.paged_chunk_attention(
+        q, k_pool, v_pool, block_tables, pos0, window=spec.window,
+        softcap=spec.softcap, scale=spec.scale, dv=spec.latent_dv,
+        interpret=interpret)

@@ -104,11 +104,11 @@ def _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref,
 
 
 def _paged_call(qg, k_pool, v_pool, k_new, v_new, block_tables, context_lens,
-                *, window, softcap, fused_new, interpret):
+                *, window, softcap, fused_new, interpret, scale=None):
     B, KVH, G, Dh = qg.shape
     num_blocks, bs = k_pool.shape[:2]
     max_nb = block_tables.shape[1]
-    scale = Dh ** -0.5
+    scale = Dh ** -0.5 if scale is None else scale
 
     grid = (B, KVH, max_nb)
     return pl.pallas_call(
@@ -146,10 +146,10 @@ def _paged_call(qg, k_pool, v_pool, k_new, v_new, block_tables, context_lens,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "softcap", "interpret"))
+                   static_argnames=("window", "softcap", "scale", "interpret"))
 def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
                     window: int = 0, softcap: float = 0.0,
-                    interpret: bool = True):
+                    scale: float = None, interpret: bool = True):
     """q: (B, H, Dh); pools: (num_blocks, bs, KVH, Dh);
     block_tables: (B, max_nb) int32; context_lens: (B,) int32 → (B, H, Dh).
 
@@ -165,15 +165,15 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
     zero = jnp.zeros((B, KVH, 1, Dh), q.dtype)
     out = _paged_call(qg, k_pool, v_pool, zero, zero, block_tables,
                       context_lens, window=window, softcap=softcap,
-                      fused_new=False, interpret=interpret)
+                      scale=scale, fused_new=False, interpret=interpret)
     return out.reshape(B, H, Dh)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "softcap", "interpret"))
+                   static_argnames=("window", "softcap", "scale", "interpret"))
 def paged_attention_fused(q, k_new, v_new, k_pool, v_pool, block_tables,
                           pos, *, window: int = 0, softcap: float = 0.0,
-                          interpret: bool = True):
+                          scale: float = None, interpret: bool = True):
     """Fused decode step: ``pos[b]`` tokens are in the pool and the current
     token's (k_new, v_new) — shape (B, KVH, Dh) — enters the softmax as an
     operand at position ``pos[b]`` without a pool read. Returns (B, H, Dh).
@@ -188,17 +188,232 @@ def paged_attention_fused(q, k_new, v_new, k_pool, v_pool, block_tables,
     kn = k_new.reshape(B, KVH, 1, Dh).astype(k_pool.dtype)
     vn = v_new.reshape(B, KVH, 1, Dh).astype(v_pool.dtype)
     out = _paged_call(qg, k_pool, v_pool, kn, vn, block_tables, pos,
-                      window=window, softcap=softcap, fused_new=True,
-                      interpret=interpret)
+                      window=window, softcap=softcap, scale=scale,
+                      fused_new=True, interpret=interpret)
     return out.reshape(B, H, Dh)
 
 
 # ---------------------------------------------------------------------------
 # chunked-prefill attention: a chunk of queries over partially-paged context
 # ---------------------------------------------------------------------------
+def _chunk_attn_kernel(tables_ref, pos0_ref, q_ref, k_ref, v_ref,
+                       kn_ref, vn_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                       block_size: int, max_nb: int, chunk: int, groups: int,
+                       scale: float, window: int, softcap: float, dv: int,
+                       fused_new: bool):
+    """Flash-style causal chunk attention over block-table-paged KV.
+
+    One (batch, kv_head) program walks the sequence's block table with
+    scalar-prefetched indirection (innermost grid dim) and keeps an
+    online-softmax accumulator for all ``chunk * groups`` query rows in
+    VMEM scratch. Query row ``r`` is chunk token ``r // groups`` at
+    absolute position ``pos0 + r // groups``.
+
+    ``fused_new=True`` is the multi-token batched-append variant: the block
+    walk reads only pool positions ``< pos0`` (the already-paged context at
+    the block-table offset) and the chunk's own C-token KV enters the
+    softmax as VMEM operands at the finish step under an intra-chunk causal
+    mask — attention never re-reads the just-appended chunk from the HBM
+    pool, so the caller's pool scatter has no data dependence on the walk.
+    With ``fused_new=False`` the chunk's KV is read back from the pool
+    (positions ``<= pos0 + i`` per query, as the gather reference does).
+
+    ``dv < Dh`` is the MLA latent mode: scores use the full latent width
+    (c_kv + rope) while the value accumulation keeps only the first ``dv``
+    (kv_lora_rank) lanes — the weight-absorption identity's paged form.
+    Masked probabilities are zeroed explicitly (not just -1e30 logits): a
+    query row whose visible span misses an entire visited block must not
+    pick up exp(0) garbage weight while its running max is still empty.
+    """
+    b = pl.program_id(0)
+    nb = pl.program_id(2)
+    CG = chunk * groups
+
+    @pl.when(nb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos0 = pos0_ref[b]
+    base = nb * block_size
+    # frontier: fused variant reads only pre-chunk context from the pool;
+    # the pool-read variant also covers the chunk's own scattered KV.
+    frontier = pos0 if fused_new else pos0 + chunk
+    valid = base < frontier
+    if window > 0:
+        # skippable when even the block's last position falls below the
+        # window of the chunk's FIRST query (pos0) — the one whose window
+        # reaches furthest back; later queries only see higher positions.
+        valid &= (base + block_size - 1) > (pos0 - window)
+
+    @pl.when(valid)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)        # (CG, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (bs, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)[:, :dv]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, (CG, block_size), 1)
+        qi = pos0 + jax.lax.broadcasted_iota(
+            jnp.int32, (CG, block_size), 0) // groups
+        msk = kpos < pos0 if fused_new else kpos <= qi
+        if window > 0:
+            msk &= kpos > qi - window
+        s = jnp.where(msk, s, -1e30)
+        m_prev = m_scr[...]                        # (CG, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(nb == max_nb - 1)
+    def _finish():
+        if fused_new:
+            # fold the chunk's own KV in: key j visible to query i iff
+            # j <= i (both at pos0 + ·), then the sliding window.
+            q = q_ref[0, 0].astype(jnp.float32)         # (CG, Dh)
+            kn = kn_ref[0, 0].astype(jnp.float32)       # (C, Dh)
+            vn = vn_ref[0, 0].astype(jnp.float32)[:, :dv]
+            s = jnp.dot(q, kn.T, preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap     # (CG, C)
+            qi = jax.lax.broadcasted_iota(jnp.int32, (CG, chunk), 0) // groups
+            kj = jax.lax.broadcasted_iota(jnp.int32, (CG, chunk), 1)
+            msk = kj <= qi
+            if window > 0:
+                msk &= kj > qi - window
+            s = jnp.where(msk, s, -1e30)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+            p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+            m_scr[...] = m_new
+            acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+                p, vn, preferred_element_type=jnp.float32)
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _chunk_call(qg, k_pool, v_pool, kn, vn, block_tables, pos0, *, chunk,
+                groups, scale, window, softcap, dv, fused_new, interpret):
+    B, KVH, CG, Dh = qg.shape
+    bs = k_pool.shape[1]
+    max_nb = block_tables.shape[1]
+
+    grid = (B, KVH, max_nb)
+    return pl.pallas_call(
+        functools.partial(_chunk_attn_kernel, block_size=bs, max_nb=max_nb,
+                          chunk=chunk, groups=groups, scale=scale,
+                          window=window, softcap=softcap, dv=dv,
+                          fused_new=fused_new),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, CG, Dh),
+                             lambda b, h, nb, tables, pos0: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, Dh),
+                             lambda b, h, nb, tables, pos0:
+                             (tables[b, nb], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, Dh),
+                             lambda b, h, nb, tables, pos0:
+                             (tables[b, nb], 0, h, 0)),
+                pl.BlockSpec((1, 1, kn.shape[2], Dh),
+                             lambda b, h, nb, tables, pos0: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, vn.shape[2], Dh),
+                             lambda b, h, nb, tables, pos0: (b, h, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, CG, dv),
+                                   lambda b, h, nb, tables, pos0:
+                                   (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, CG, dv), qg.dtype),
+        interpret=interpret,
+    )(block_tables, pos0, qg, k_pool, v_pool, kn, vn)
+
+
+def _chunk_io(q, k_pool):
+    """(B, C, H, Dh) queries → (B, KVH, C*G, Dh) kernel layout + dims."""
+    B, C, H, Dh = q.shape
+    KVH = k_pool.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, C, KVH, G, Dh).transpose(0, 2, 1, 3, 4)
+    return qg.reshape(B, KVH, C * G, Dh), (B, C, H, KVH, G, Dh)
+
+
+def _pos0_vec(pos0, B):
+    return jnp.broadcast_to(jnp.asarray(pos0, jnp.int32).reshape(-1), (B,))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "dv", "interpret"))
+def paged_chunk_attention(q, k_pool, v_pool, block_tables, pos0, *,
+                          window: int = 0, softcap: float = 0.0,
+                          scale: float = None, dv: int = None,
+                          interpret: bool = True):
+    """Pool-read chunk block walk: q (B, C, H, Dh), chunk KV already
+    scattered into the pool at the block-table offset. Query i at absolute
+    position ``pos0 + i`` sees every pool position ``<= pos0 + i``
+    (pool garbage beyond the chunk frontier is causally masked), matching
+    :func:`paged_chunk_gather_attention` exactly. Returns (B, C, H, dv).
+
+    ``scale`` overrides the default ``Dh ** -0.5``; ``dv`` < Dh enables the
+    MLA latent mode (values = first ``dv`` lanes of the latent pool).
+    """
+    qg, (B, C, H, KVH, G, Dh) = _chunk_io(q, k_pool)
+    dv = dv or Dh
+    scale = Dh ** -0.5 if scale is None else scale
+    zero = jnp.zeros((B, KVH, 1, Dh), k_pool.dtype)
+    out = _chunk_call(qg, k_pool, v_pool, zero, zero, block_tables,
+                      _pos0_vec(pos0, B), chunk=C, groups=G, scale=scale,
+                      window=window, softcap=softcap, dv=dv, fused_new=False,
+                      interpret=interpret)
+    return out.reshape(B, KVH, C, G, dv).transpose(0, 2, 1, 3, 4).reshape(
+        B, C, H, dv)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "dv", "interpret"))
+def paged_chunk_attention_fused(q, k_new, v_new, k_pool, v_pool,
+                                block_tables, pos0, *, window: int = 0,
+                                softcap: float = 0.0, scale: float = None,
+                                dv: int = None, interpret: bool = True):
+    """Multi-token batched-append chunk walk: the block walk covers only the
+    already-paged context (< ``pos0``) and the chunk's own (k_new, v_new) —
+    shape (B, C, KVH, Dh) — enter the online softmax as VMEM operands under
+    an intra-chunk causal mask, the C-token generalization of the decode
+    kernel's fused single-token append. The caller still owns the pool
+    scatter of the chunk's KV (for later chunks/decode); this kernel never
+    reads pool positions ``>= pos0``, so scatter and walk are independent.
+    Returns (B, C, H, dv)."""
+    qg, (B, C, H, KVH, G, Dh) = _chunk_io(q, k_pool)
+    dv = dv or Dh
+    scale = Dh ** -0.5 if scale is None else scale
+    kn = k_new.transpose(0, 2, 1, 3).astype(k_pool.dtype)   # (B, KVH, C, Dh)
+    vn = v_new.transpose(0, 2, 1, 3).astype(v_pool.dtype)
+    out = _chunk_call(qg, k_pool, v_pool, kn, vn, block_tables,
+                      _pos0_vec(pos0, B), chunk=C, groups=G, scale=scale,
+                      window=window, softcap=softcap, dv=dv, fused_new=True,
+                      interpret=interpret)
+    return out.reshape(B, KVH, C, G, dv).transpose(0, 2, 1, 3, 4).reshape(
+        B, C, H, dv)
+
+
 def paged_chunk_gather_attention(q, k_pool, v_pool, block_tables, pos0, *,
-                                 window: int = 0, softcap: float = 0.0):
-    """Causal chunk attention against paged KV (gather path, all backends).
+                                 window: int = 0, softcap: float = 0.0,
+                                 scale: float = None, dv: int = None):
+    """Causal chunk attention against paged KV (gather path / parity oracle).
 
     q: (B, C, H, Dh) — C consecutive queries at absolute positions
     ``pos0 .. pos0 + C - 1``; the pool already holds the chunk's own KV
@@ -207,17 +422,22 @@ def paged_chunk_gather_attention(q, k_pool, v_pool, block_tables, pos0, *,
     — garbage beyond the chunk frontier sits at positions ``> pos0 + C - 1``
     and is always masked. Cost is linear in ``block_tables.shape[1]``, which
     the engine buckets to the power of two covering the chunk's end, so
-    prefill HBM traffic follows the *paged* context. A dedicated Pallas
-    block-walk for chunk prefill is the remaining TPU fast-path item; this
-    gather is the numerically-pinned reference it must match.
+    prefill HBM traffic follows the *paged* context. The Pallas block walk
+    above is the TPU fast path; this gather is the numerically-pinned
+    reference it must match (and the ``xla`` dispatch-mode fallback).
+
+    ``scale``/``dv`` mirror the kernel's MLA latent mode: explicit softmax
+    scale and value truncation to the first ``dv`` lanes.
     """
     from repro.models.layers import naive_attention
     B = q.shape[0]
     nb, bs = block_tables.shape[1], k_pool.shape[1]
     gk = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
     gv = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    if dv is not None:
+        gv = gv[..., :dv]
     return naive_attention(q, gk, gv, causal=True, q_offset=pos0,
-                           window=window, softcap=softcap)
+                           window=window, softcap=softcap, scale=scale)
 
 
 # ---------------------------------------------------------------------------

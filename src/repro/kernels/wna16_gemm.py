@@ -111,14 +111,20 @@ def _wna16_kernel(*refs, bits: int, bk: int, group: int, n_k: int,
 def wna16_gemm(x, packed, scales, zeros, inv_act=None, bias=None, *,
                bits: int, group: int, out_dtype=None,
                bm: int = 0, bn: int = 128, bk: int = 512,
-               interpret: bool = True):
+               interpret: bool = None):
     """x: (M, K) × packed int{4,8} (K-packed, N) → (M, N) ``out_dtype``.
 
     ``inv_act`` (K,) and ``bias`` (N,) are optional fused-epilogue operands;
     ``out_dtype`` defaults to ``x.dtype``. M is padded to the auto-selected
     skinny block; K must be divisible by the resliced ``bk`` (always a group
     multiple); N is blocked at the largest power-of-two divisor <= ``bn``.
+    ``interpret=None`` resolves through :mod:`repro.kernels.dispatch`:
+    compiled under the ``pallas`` mode (and ``auto`` on TPU), interpret
+    everywhere else.
     """
+    if interpret is None:
+        from repro.kernels import dispatch
+        interpret = dispatch.resolve() != "pallas"
     M, K = x.shape
     N = scales.shape[-1]
     out_dtype = jnp.dtype(out_dtype or x.dtype)

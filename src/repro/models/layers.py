@@ -112,19 +112,22 @@ def _softcap(scores, cap):
 
 
 def naive_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
-                    kv_len=None, softcap: float = 0.0):
+                    kv_len=None, softcap: float = 0.0, scale: float = None):
     """Materialized-score attention.
 
     q: (B, S, H, D); k, v: (B, T, KVH, D).  GQA via head grouping.
     ``q_offset``: absolute position of q[0] (decode). ``kv_len``: (B,) valid
     kv length for cache-backed decode. ``window``: sliding window (0 = full).
+    ``scale`` overrides the default ``D ** -0.5`` softmax scale (MLA latent
+    attention scores over r+rope lanes but scales by the qk head dim).
     """
     B, S, H, D = q.shape
     T, KVH = k.shape[1], k.shape[2]
     G = H // KVH
     qg = q.reshape(B, S, KVH, G, D)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * (D ** -0.5)
+                        k.astype(jnp.float32)) * \
+        (D ** -0.5 if scale is None else scale)
     scores = _softcap(scores, softcap)
     q_offset = jnp.asarray(q_offset)
     if q_offset.ndim == 0:

@@ -1,12 +1,19 @@
 """Chunked prefill + token-budgeted continuous batching (ISSUE 4).
 
 Covers: bit-identity of chunked vs whole-prompt prefill (fp16, full-int4,
-MLA, and a forced swap-level crossing), preempt-during-prefill → resume,
-decode progress during prompt bursts (no decode-free step while a prefill
-backlog exists), and the controller's chunk-budget actuator.
+MLA, and a forced swap-level crossing), the same identity with chunk
+attention routed through the fused Pallas block-walk kernel
+(REPRO_QUANT_KERNEL=pallas_interpret) instead of the gather reference,
+preempt-during-prefill → resume, decode progress during prompt bursts (no
+decode-free step while a prefill backlog exists), and the controller's
+chunk-budget actuator.
 """
+import contextlib
+
 import jax
 import pytest
+
+from repro.kernels import dispatch
 
 from repro.configs import ServingConfig, reduced, MORPH_LLAMA2_7B, ASSIGNED
 from repro.core import tree_bytes
@@ -123,6 +130,90 @@ def test_chunked_prefill_mla(model):
     _, toks_c = _run_to_completion(eng_c, trace, max_steps=2000)
     assert eng_c.all_requests[0].prefill_chunks >= 2
     assert toks_w == toks_c
+
+
+# --------------------------------------------------------------------------
+# token identity through the fused Pallas chunk kernel (interpret mode)
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def kernel_mode(mode):
+    prev = dispatch.set_mode(mode)
+    try:
+        yield
+    finally:
+        dispatch.set_mode(prev)
+
+
+@pytest.mark.parametrize("policy", ["static_fp16", "static_int4"])
+def test_chunked_prefill_kernel_mode_token_identity(model, policy):
+    """Chunk attention through the fused Pallas block-walk kernel
+    (batched-append variant, interpret mode) produces the exact token
+    stream of the gather-reference xla path — per prompt chunk AND for the
+    decode steps that follow, on dense fp16 and fully-int4 layers. The mode
+    is set before engine construction so the per-engine jit caches trace
+    the intended path."""
+    cfg, params = model
+    trace = [TraceRequest(0.0, 70, 6), TraceRequest(0.0, 20, 8)]
+    with kernel_mode("xla"):
+        eng_x = make_engine(cfg, params, policy=policy,
+                            max_tokens_per_step=24)
+        _, toks_x = _run_to_completion(eng_x, trace)
+    with kernel_mode("pallas_interpret"):
+        eng_p = make_engine(cfg, params, policy=policy,
+                            max_tokens_per_step=24)
+        _, toks_p = _run_to_completion(eng_p, trace)
+    assert eng_p.all_requests[0].prefill_chunks >= 2
+    assert toks_p == toks_x, \
+        "fused chunk kernel must be token-identical to the gather reference"
+
+
+def test_chunked_prefill_kernel_mode_across_swap_levels(model):
+    """A swap level landing mid-prefill (between chunks of one prompt):
+    later chunks attend over context paged by earlier chunks under the
+    previous level's weights. The fused kernel path must track the gather
+    reference token-for-token through the transition."""
+    cfg, params = model
+
+    def run(mode):
+        with kernel_mode(mode):
+            eng = make_engine(cfg, params, policy="morph",
+                              max_tokens_per_step=16)
+            eng.controller.decide = lambda sig: None   # manual level control
+            r = eng.submit(TraceRequest(0.0, 64, 8))
+            swapped = False
+            for _ in range(2000):
+                if r.state == RState.FINISHED:
+                    break
+                eng.step()
+                if not swapped and 0 < r.prefill_pos < r.prompt_len:
+                    swapped = True                      # mid-prefill morph
+                    eng.actuator.issue(2, eng.now)
+                    eng.actuator.poll(eng.now + 1e9)    # land instantly
+            assert r.state == RState.FINISHED
+            assert swapped and r.prefill_chunks >= 2
+            return r
+    r_x = run("xla")
+    r_p = run("pallas_interpret")
+    assert r_x.token_levels == r_p.token_levels
+    assert r_x.generated == r_p.generated
+
+
+def test_chunked_prefill_kernel_mode_mla(model):
+    """MLA chunks under the Pallas modes score against the latent pool with
+    the absorbed decode weights (spec.latent_dv / spec.scale); the xla path
+    expands the latent to per-head KV. Same tokens either way — the
+    weight-absorption identity, now exercised chunk-by-chunk."""
+    cfg = reduced(ASSIGNED["deepseek-v3-671b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(3))
+    trace = [TraceRequest(0.0, 40, 4)]
+    with kernel_mode("xla"):
+        eng_x = make_engine(cfg, params, blocks=30, max_tokens_per_step=16)
+        _, toks_x = _run_to_completion(eng_x, trace, max_steps=2000)
+    with kernel_mode("pallas_interpret"):
+        eng_p = make_engine(cfg, params, blocks=30, max_tokens_per_step=16)
+        _, toks_p = _run_to_completion(eng_p, trace, max_steps=2000)
+    assert eng_p.all_requests[0].prefill_chunks >= 2
+    assert toks_p == toks_x
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,68 @@
+"""The shared REPRO_QUANT_KERNEL resolver (kernels/dispatch.py)."""
+import pytest
+
+from repro.kernels import dispatch, ops
+
+
+@pytest.fixture(autouse=True)
+def _restore_mode():
+    prev = dispatch.mode()
+    yield
+    dispatch.set_mode(prev)
+
+
+def test_set_mode_returns_previous_and_round_trips():
+    first = dispatch.set_mode("xla")
+    assert dispatch.mode() == "xla"
+    assert dispatch.set_mode("pallas") == "xla"
+    assert dispatch.mode() == "pallas"
+    dispatch.set_mode(first)
+    assert dispatch.mode() == first
+
+
+def test_resolve_all_modes_per_backend():
+    # auto resolves by backend; explicit modes pass through unchanged
+    assert dispatch.resolve("auto", backend="tpu") == "pallas"
+    assert dispatch.resolve("auto", backend="cpu") == "xla"
+    assert dispatch.resolve("auto", backend="gpu") == "xla"
+    for m in ("pallas", "pallas_interpret", "xla"):
+        for backend in ("tpu", "cpu"):
+            assert dispatch.resolve(m, backend=backend) == m
+
+
+def test_resolve_defaults_to_global_mode():
+    dispatch.set_mode("pallas_interpret")
+    assert dispatch.resolve() == "pallas_interpret"
+    assert dispatch.uses_pallas()
+    assert dispatch.interpret()
+    dispatch.set_mode("xla")
+    assert dispatch.resolve() == "xla"
+    assert not dispatch.uses_pallas()
+    assert not dispatch.interpret()
+    dispatch.set_mode("pallas")
+    assert dispatch.uses_pallas() and not dispatch.interpret()
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="REPRO_QUANT_KERNEL"):
+        dispatch.set_mode("cuda")
+    with pytest.raises(ValueError, match="REPRO_QUANT_KERNEL"):
+        dispatch.resolve("tensorrt")
+    # a rejected set_mode must not clobber the current mode
+    dispatch.set_mode("xla")
+    with pytest.raises(ValueError):
+        dispatch.set_mode("nope")
+    assert dispatch.mode() == "xla"
+
+
+def test_ops_wrappers_delegate_to_dispatch():
+    # ops.set_quant_kernel_mode / quant_kernel_mode are thin shims kept for
+    # back-compat; they must share the one global with dispatch
+    prev = ops.set_quant_kernel_mode("pallas_interpret")
+    try:
+        assert dispatch.mode() == "pallas_interpret"
+        assert ops.quant_kernel_mode() == "pallas_interpret"
+        dispatch.set_mode("xla")
+        assert ops.quant_kernel_mode() == "xla"
+    finally:
+        ops.set_quant_kernel_mode(prev)

@@ -268,6 +268,154 @@ def test_paged_decode_attention_bucketed_tables():
                                    rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# chunk-prefill block-walk kernel (pool-read + fused batched-append variants)
+# ---------------------------------------------------------------------------
+def _chunk_case(seed, B, C, H, KVH, Dh, bs, maxnb, pos0):
+    """Random chunk-prefill case: globally-distinct live blocks (ownership
+    contract), chunk KV scattered into the pool at the table offset, plus
+    the raw (k_new, v_new) operands for the fused batched-append variant."""
+    nblocks = B * maxnb + 1
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, C, H, Dh))
+    kp = jax.random.normal(ks[1], (nblocks, bs, KVH, Dh))
+    vp = jax.random.normal(ks[2], (nblocks, bs, KVH, Dh))
+    tables = jnp.array(1 + rng.permutation(B * maxnb).reshape(B, maxnb),
+                       jnp.int32)
+    kn = jax.random.normal(ks[3], (B, C, KVH, Dh))
+    vn = jax.random.normal(ks[4], (B, C, KVH, Dh))
+    assert pos0 + C <= maxnb * bs
+    idx = pos0 + np.arange(C)
+    blk = np.take_along_axis(np.asarray(tables), idx[None, :] // bs, axis=1)
+    kp = kp.at[blk, idx[None, :] % bs].set(kn)
+    vp = vp.at[blk, idx[None, :] % bs].set(vn)
+    return q, kp, vp, tables, kn, vn
+
+
+@pytest.mark.parametrize("B,C,H,KVH,Dh,bs,maxnb,pos0", [
+    (2, 8, 8, 2, 64, 16, 4, 16),    # GQA G=4, block-aligned offset
+    (1, 16, 4, 4, 32, 8, 6, 13),    # MHA, unaligned nonzero offset
+    (2, 4, 16, 1, 64, 8, 4, 0),     # MQA, chunk at the very start
+])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (9, 0.0), (0, 25.0),
+                                            (9, 25.0)])
+def test_paged_chunk_attention_sweep(B, C, H, KVH, Dh, bs, maxnb, pos0,
+                                     window, softcap):
+    """Both chunk-kernel variants vs the gather reference across GQA group
+    sizes, window, softcap, and (un)aligned block-table offsets. The fused
+    batched-append variant must also be independent of the pool scatter —
+    it may never read pool positions >= pos0."""
+    from repro.kernels import paged_attention as pa
+    q, kp, vp, tables, kn, vn = _chunk_case(C * H + pos0 + window, B, C, H,
+                                            KVH, Dh, bs, maxnb, pos0)
+    want = pa.paged_chunk_gather_attention(q, kp, vp, tables, pos0,
+                                           window=window, softcap=softcap)
+    out_pool = pa.paged_chunk_attention(q, kp, vp, tables, pos0,
+                                        window=window, softcap=softcap,
+                                        interpret=True)
+    out_fused = pa.paged_chunk_attention_fused(q, kn, vn, kp, vp, tables,
+                                               pos0, window=window,
+                                               softcap=softcap,
+                                               interpret=True)
+    # scrub the chunk span from the pool with garbage: fused output must not
+    # change (large-finite, not NaN — a partially-owned block is still read
+    # whole and masked, and 0 * NaN would poison the masked accumulate)
+    idx = pos0 + np.arange(C)
+    blk = np.take_along_axis(np.asarray(tables), idx[None, :] // bs, axis=1)
+    kp0 = kp.at[blk, idx[None, :] % bs].set(1e8)
+    vp0 = vp.at[blk, idx[None, :] % bs].set(1e8)
+    out_noscatter = pa.paged_chunk_attention_fused(
+        q, kn, vn, kp0, vp0, tables, pos0, window=window, softcap=softcap,
+        interpret=True)
+    for out in (out_pool, out_fused, out_noscatter):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("C", [8, 16, 32, 64])
+def test_paged_chunk_attention_pow2_chunk_buckets(C):
+    """The fused batched-append variant across the engine's pow2 chunk
+    buckets, each at a nonzero block-table offset (context from earlier
+    chunks already paged)."""
+    from repro.kernels import paged_attention as pa
+    B, H, KVH, Dh, bs = 2, 8, 2, 32, 16
+    maxnb = (64 + C) // bs + 1
+    q, kp, vp, tables, kn, vn = _chunk_case(C, B, C, H, KVH, Dh, bs, maxnb,
+                                            pos0=64)
+    want = pa.paged_chunk_gather_attention(q, kp, vp, tables, 64)
+    out = pa.paged_chunk_attention_fused(q, kn, vn, kp, vp, tables, 64,
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_chunk_attention_mla_latent():
+    """MLA latent mode: KVH=1 latent pool of width r+rope, scores over the
+    full latent width, values = first ``dv`` lanes, explicit softmax scale
+    — kernel vs the gather reference with the same (scale, dv)."""
+    from repro.kernels import paged_attention as pa
+    B, C, H, r, rope, bs, maxnb, pos0 = 2, 8, 8, 32, 16, 8, 6, 21
+    Dh = r + rope
+    scale = 48.0 ** -0.5                 # qk head-dim scale, != Dh**-0.5
+    q, kp, vp, tables, kn, vn = _chunk_case(3, B, C, H, 1, Dh, bs, maxnb,
+                                            pos0)
+    want = pa.paged_chunk_gather_attention(q, kp, kp, tables, pos0,
+                                           scale=scale, dv=r)
+    out_pool = pa.paged_chunk_attention(q, kp, kp, tables, pos0, scale=scale,
+                                        dv=r, interpret=True)
+    out_fused = pa.paged_chunk_attention_fused(q, kn, kn, kp, kp, tables,
+                                               pos0, scale=scale, dv=r,
+                                               interpret=True)
+    assert out_pool.shape == (B, C, H, r)
+    for out in (out_pool, out_fused):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_paged_chunk_attention_table_width_invariance():
+    """Like decode: truncating the table to any pow2 width covering
+    ``pos0 + C`` must not change the chunk output (bucketed-table
+    contract)."""
+    from repro.kernels import paged_attention as pa
+    B, C, H, KVH, Dh, bs, maxnb = 2, 8, 8, 2, 32, 8, 8
+    pos0 = 9                             # live span 9..16 → 3 blocks
+    q, kp, vp, tables, kn, vn = _chunk_case(11, B, C, H, KVH, Dh, bs, maxnb,
+                                            pos0)
+    full = pa.paged_chunk_attention_fused(q, kn, vn, kp, vp, tables, pos0,
+                                          interpret=True)
+    for nb_t in (4, 8):
+        out = pa.paged_chunk_attention_fused(q, kn, vn, kp, vp,
+                                             tables[:, :nb_t], pos0,
+                                             interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ops_paged_prefill_attention_dispatch():
+    """The unified ops wrapper: xla mode == gather reference bit-for-bit;
+    pallas_interpret mode (fused when k_new/v_new given, pool-read
+    otherwise) matches it numerically; AttentionSpec carries window/softcap."""
+    from repro.kernels import paged_attention as pa
+    B, C, H, KVH, Dh, bs, maxnb, pos0 = 2, 8, 8, 2, 32, 8, 5, 11
+    spec = ops.AttentionSpec(window=13, softcap=20.0)
+    q, kp, vp, tables, kn, vn = _chunk_case(17, B, C, H, KVH, Dh, bs, maxnb,
+                                            pos0)
+    want = pa.paged_chunk_gather_attention(q, kp, vp, tables, pos0,
+                                           window=13, softcap=20.0)
+    with quant_kernel_mode("xla"):
+        out_x = ops.paged_prefill_attention(q, kp, vp, tables, pos0, spec,
+                                            k_new=kn, v_new=vn)
+    np.testing.assert_array_equal(np.asarray(out_x), np.asarray(want))
+    with quant_kernel_mode("pallas_interpret"):
+        out_f = ops.paged_prefill_attention(q, kp, vp, tables, pos0, spec,
+                                            k_new=kn, v_new=vn)
+        out_p = ops.paged_prefill_attention(q, kp, vp, tables, pos0, spec)
+    for out in (out_f, out_p):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_paged_matches_dense_attention():
     """Paged oracle == dense causal attention when the table is contiguous."""
     from repro.models.layers import naive_attention
